@@ -1,0 +1,126 @@
+"""Shared benchmark infrastructure.
+
+Scaled-down regime (CPU container): reduced target configs, short
+self-generated corpora (the paper's target-trace training regime), tiny
+drafters. Absolute numbers differ from the paper's H200 measurements; the
+*relationships* the paper claims (which variant wins, how AL moves with
+layers/epochs/K_train, AR-vs-parallel OTPS crossover) are what each table
+reproduces. Trained drafters are checkpoint-cached under results/bench_cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import zlib
+import time
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.checkpoint import load_pytree, save_pytree  # noqa: E402
+from repro.configs import DrafterConfig, get_config  # noqa: E402
+from repro.core import drafter as D  # noqa: E402
+from repro.data import MTPPipeline, self_generated_corpus  # noqa: E402
+from repro.models import get_model, make_extras  # noqa: E402
+from repro.serving import Engine, EngineConfig  # noqa: E402
+from repro.training import Trainer, TrainConfig  # noqa: E402
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", "results",
+                     "bench_cache")
+os.makedirs(CACHE, exist_ok=True)
+
+SEQ_LEN = 48
+N_SEQS = 128
+KEY = jax.random.PRNGKey(0)
+
+
+@lru_cache(maxsize=None)
+def get_target(arch: str = "qwen2-1.5b"):
+    tcfg = get_config(arch).reduced()
+    m = get_model(tcfg)
+    tparams = m.init(jax.random.fold_in(KEY, zlib.crc32(arch.encode()) % 2**31))
+    return tcfg, m, tparams
+
+
+@lru_cache(maxsize=None)
+def get_corpus(arch: str = "qwen2-1.5b", n_seqs: int = N_SEQS,
+               seq_len: int = SEQ_LEN):
+    fn = os.path.join(CACHE, f"corpus_{arch}_{n_seqs}x{seq_len}.npz")
+    if os.path.exists(fn):
+        return np.load(fn)["corpus"]
+    tcfg, m, tparams = get_target(arch)
+    extras_fn = (lambda b: make_extras(tcfg, b, "prefill", KEY)) \
+        if tcfg.family in ("vlm", "encdec") else None
+    corpus = self_generated_corpus(m, tparams, seed=1, n_seqs=n_seqs,
+                                   seq_len=seq_len, prompt_len=4, batch=16,
+                                   extras_fn=extras_fn)
+    np.savez(fn, corpus=corpus)
+    return corpus
+
+
+def train_drafter(tag: str, *, arch: str = "qwen2-1.5b", epochs: int = 30,
+                  lr: float = 2e-3, batch: int = 16, segments: int = 1,
+                  corpus=None, **dcfg_kw):
+    """Train (or load cached) a drafter; returns (dcfg, dparams, history)."""
+    tcfg, m, tparams = get_target(arch)
+    dcfg = DrafterConfig(**dcfg_kw).resolve(tcfg)
+    if corpus is None:
+        corpus = get_corpus(arch)
+    ckdir = os.path.join(CACHE, f"drafter_{arch}_{tag}")
+    tmpl = D.init_params(dcfg, tcfg, KEY)
+    try:
+        dparams = load_pytree(tmpl, ckdir, "drafter")
+        return dcfg, dparams, None
+    except (FileNotFoundError, KeyError, ValueError):
+        pass
+    extras = (make_extras(tcfg, batch, "train", KEY)
+              if tcfg.family in ("vlm", "encdec") else {})
+    pipe = MTPPipeline(corpus, k_train=dcfg.k_train, cod_rate=dcfg.cod_rate,
+                       batch=batch, seed=0, segments=segments)
+    tr = Trainer(tcfg, dcfg, tparams,
+                 TrainConfig(lr=lr, total_steps=epochs * max(
+                     len(corpus) // batch, 1)), extras=extras)
+    log = tr.train(pipe, epochs=epochs)
+    save_pytree(tr.dparams, ckdir, "drafter", step=epochs)
+    return dcfg, tr.dparams, log
+
+
+def eval_engine(arch, dcfg, dparams, *, K=5, mode="parallel", batch=12,
+                max_new=32, prompt_len=6, seed=5):
+    """Acceptance length + OTPS on held-out in-distribution prompts
+    (prefixes of fresh target-generated traces)."""
+    tcfg, m, tparams = get_target(arch)
+    corpus = get_corpus(arch)
+    rng = np.random.default_rng(seed)
+    rows = rng.choice(len(corpus), size=batch, replace=False)
+    prompts = jnp.asarray(corpus[rows, :prompt_len])
+    extras = (make_extras(tcfg, batch, "prefill", KEY)
+              if tcfg.family in ("vlm", "encdec") else {})
+    eng = Engine(tcfg, dcfg, tparams, dparams,
+                 EngineConfig(K=K, max_new_tokens=max_new,
+                              drafter_mode=mode, max_len=128), batch)
+    r = eng.run(prompts, extras)
+    # steady-state OTPS: rerun once compiled
+    r = eng.run(prompts, extras)
+    return r
+
+
+def timed(fn, *a, repeats=3, **k):
+    fn(*a, **k)  # warmup/compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*a, **k)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") \
+            or isinstance(out, jax.Array) else None
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def row(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

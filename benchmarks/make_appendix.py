@@ -1,0 +1,36 @@
+"""Regenerate EXPERIMENTS.md §Appendix roofline tables from results/."""
+import os
+import re
+
+from benchmarks.roofline import load_records, markdown_table
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def main():
+    base = load_records("baseline")
+    opt = load_records("optimized")
+    parts = ["## §Appendix — roofline tables\n"]
+    for name, recs, mesh in [("Baseline, single-pod 16×16", base, "16x16"),
+                             ("Baseline, two-pod 2×16×16", base, "2x16x16"),
+                             ("Optimized, single-pod 16×16", opt, "16x16"),
+                             ("Optimized, two-pod 2×16×16", opt, "2x16x16")]:
+        if not recs:
+            continue
+        parts.append(f"### {name}\n")
+        parts.append(markdown_table(recs, mesh=mesh))
+        parts.append("")
+    appendix = "\n".join(parts)
+
+    fn = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(fn) as f:
+        txt = f.read()
+    txt = re.sub(r"## §Appendix.*\Z", "", txt, flags=re.S).rstrip() + "\n\n"
+    with open(fn, "w") as f:
+        f.write(txt + appendix + "\n")
+    print(f"appendix written: {len(base)} baseline + {len(opt)} optimized "
+          f"records")
+
+
+if __name__ == "__main__":
+    main()

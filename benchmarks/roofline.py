@@ -1,0 +1,71 @@
+"""§Roofline aggregation: reads results/dryrun/*.json (produced by
+repro.launch.dryrun) and emits the per-(arch × shape × mesh) roofline table
+with the three terms, dominant bottleneck, MODEL_FLOPS ratio, and memory
+fit. Also prints CSV rows for benchmarks/run.py."""
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_records(variant: str = "baseline"):
+    d = RESULTS if variant == "baseline" else RESULTS + "_opt"
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def markdown_table(recs, mesh="16x16"):
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "bottleneck | useful FLOPs ratio | live GB/chip | fits |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skip ({r.get('reason')}) | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"ERROR | — | — | — |")
+            continue
+        t = r["roofline"]
+        live = r["memory"].get("live_bytes")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.2e} | "
+            f"{t['memory_s']:.2e} | {t['collective_s']:.2e} | "
+            f"{t['bottleneck'].replace('_s','')} | "
+            f"{t.get('useful_flops_ratio', 0):.3f} | "
+            f"{(live or 0) / 1e9:.2f} | "
+            f"{'y' if r['memory'].get('fits_16GB') else 'N'} |")
+    return "\n".join(lines)
+
+
+def run():
+    out = {}
+    for variant in ("baseline", "optimized"):
+        recs = load_records(variant)
+        if not recs:
+            continue
+        ok = [r for r in recs if r.get("status") == "ok"]
+        skip = [r for r in recs if r.get("status") == "skip"]
+        err = [r for r in recs if r.get("status") == "error"]
+        print(f"roofline/{variant}/records,{len(recs)},ok={len(ok)} "
+              f"skip={len(skip)} err={len(err)}")
+        for r in ok:
+            t = r["roofline"]
+            print(f"roofline/{variant}/{r['arch']}__{r['shape']}__{r['mesh']},"
+                  f"{max(t['compute_s'], t['memory_s'], t['collective_s']) * 1e6:.1f},"
+                  f"bottleneck={t['bottleneck']} "
+                  f"c={t['compute_s']:.2e} m={t['memory_s']:.2e} "
+                  f"x={t['collective_s']:.2e}")
+        out[variant] = recs
+    return out
+
+
+if __name__ == "__main__":
+    print(markdown_table(load_records()))

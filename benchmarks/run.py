@@ -1,0 +1,64 @@
+"""Benchmark driver — one module per paper table + the roofline summary.
+
+``PYTHONPATH=src python -m benchmarks.run [--tables 2,4] [--quick]``
+
+Prints ``name,us_per_call,derived`` CSV per the repo convention. Trained
+drafters are cached under results/bench_cache, so re-runs are fast.
+"""
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tables", default="all",
+                    help="comma list, e.g. 2,4,10 (default: all)")
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer epochs / smaller sweeps")
+    args = ap.parse_args()
+
+    from benchmarks import (table1_scaling, table2_overhead,
+                            table3_hidden_state, table4_layers,
+                            table5_embedding, table6_depth, table7_epochs,
+                            table8_seqlen, table9_acceptance, table10_otps,
+                            roofline)
+
+    epochs = 12 if args.quick else 22
+    jobs = {
+        "1": lambda: table1_scaling.run(),
+        "2": lambda: table2_overhead.run(),
+        "3": lambda: table3_hidden_state.run(epochs=epochs),
+        "4": lambda: table4_layers.run(epochs=epochs),
+        "5": lambda: table5_embedding.run(epochs=epochs),
+        "6": lambda: table6_depth.run(epochs=epochs),
+        "7": lambda: table7_epochs.run(),
+        "8": lambda: table8_seqlen.run(epochs=epochs),
+        "9": lambda: table9_acceptance.run(epochs=epochs),
+        "10": lambda: table10_otps.run(epochs=epochs),
+        "roofline": lambda: roofline.run(),
+    }
+    wanted = list(jobs) if args.tables == "all" else [
+        t.strip() for t in args.tables.split(",")]
+
+    failures = 0
+    for t in wanted:
+        if t not in jobs:
+            print(f"unknown table {t!r}", file=sys.stderr)
+            continue
+        t0 = time.time()
+        print(f"# --- table {t} ---", flush=True)
+        try:
+            jobs[t]()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"table{t}/FAILED,0,", flush=True)
+        print(f"# table {t} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

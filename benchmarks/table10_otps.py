@@ -1,0 +1,42 @@
+"""Paper Table 10 — end-to-end output tokens/s (OTPS) across speculation
+depths K ∈ {3,5,7} and concurrency C ∈ {2,4}, AR EAGLE-3 vs P-EAGLE, plus
+the vanilla (no-spec) floor.
+
+The paper's headline mechanism must reproduce on CPU: AR drafting costs K
+sequential drafter forwards per iteration, P-EAGLE one; so P-EAGLE's OTPS
+advantage *grows with K* while AR peaks at small K. Absolute OTPS is
+CPU-scale; the K-shape and the AR/P-EAGLE ordering are the claims."""
+from benchmarks.common import eval_engine, row, train_drafter
+
+
+def run(epochs=15, Ks=(3, 5, 7), Cs=(2, 4)):
+    arch = "qwen2-1.5b"
+    dcfg_ar, dp_ar, _ = train_drafter(
+        "table9_ar_" + arch, arch=arch, epochs=epochs, n_layers=1, parallel=False,
+        ttt_steps=2, hca=True, k_train=1, cod_rate=0.99)
+    dcfg_p, dp_p, _ = train_drafter(
+        "table9_peagle_" + arch, arch=arch, epochs=epochs, n_layers=4, k_train=8)
+
+    results = {}
+    for C in Cs:
+        r0 = eval_engine(arch, None, None, K=0, mode="none", batch=C,
+                         max_new=24)
+        row(f"table10/vanilla_C{C}", 1e6 / max(r0["otps"], 1e-9),
+            f"OTPS={r0['otps']:.1f}")
+        for K in Ks:
+            r_ar = eval_engine(arch, dcfg_ar, dp_ar, K=K, mode="ar",
+                               batch=C, max_new=24)
+            r_p = eval_engine(arch, dcfg_p, dp_p, K=K, mode="parallel",
+                              batch=C, max_new=24)
+            sp = r_p["otps"] / max(r_ar["otps"], 1e-9)
+            row(f"table10/ar_K{K}_C{C}", 1e6 / max(r_ar["otps"], 1e-9),
+                f"OTPS={r_ar['otps']:.1f} AL={r_ar['acceptance_length']:.2f}")
+            row(f"table10/peagle_K{K}_C{C}", 1e6 / max(r_p["otps"], 1e-9),
+                f"OTPS={r_p['otps']:.1f} AL={r_p['acceptance_length']:.2f} "
+                f"speedup={sp:.2f}x")
+            results[(K, C)] = (r_ar["otps"], r_p["otps"], sp)
+    return results
+
+
+if __name__ == "__main__":
+    run()

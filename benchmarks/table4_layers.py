@@ -1,0 +1,22 @@
+"""Paper Table 4 — drafter depth ablation (§4.2): 1 vs 2 vs 4 layers.
+The paper reports +33% (1→2) and +46% (1→4) acceptance length."""
+from benchmarks.common import eval_engine, row, train_drafter
+
+
+def run(epochs=15):
+    als = {}
+    for n_layers in (1, 2, 4):
+        tag = "table3_shared" if n_layers == 2 else f"table4_L{n_layers}"
+        dcfg, dparams, _ = train_drafter(
+            tag, epochs=epochs, n_layers=n_layers, k_train=5)
+        r = eval_engine("qwen2-1.5b", dcfg, dparams, K=5)
+        als[n_layers] = r["acceptance_length"]
+    base = als[1]
+    for L, al in als.items():
+        row(f"table4/layers_{L}", al * 1e6,
+            f"AL={al:.3f} delta={(al - base) / base * 100:+.1f}%")
+    return als
+
+
+if __name__ == "__main__":
+    run()

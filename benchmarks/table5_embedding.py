@@ -1,0 +1,23 @@
+"""Paper Table 5 — frozen vs trainable embeddings (§4.3). The mask-token
+embedding must learn; the paper reports +5% for unfreezing."""
+from benchmarks.common import eval_engine, row, train_drafter
+
+
+def run(epochs=15):
+    als = {}
+    for frozen in (True, False):
+        tag = f"table5_frozen1" if frozen else "table3_shared"
+        dcfg, dparams, _ = train_drafter(
+            tag, epochs=epochs, n_layers=2, k_train=5,
+            freeze_embeddings=frozen)
+        r = eval_engine("qwen2-1.5b", dcfg, dparams, K=5)
+        als[frozen] = r["acceptance_length"]
+    d = (als[False] - als[True]) / als[True] * 100
+    row("table5/frozen", als[True] * 1e6, f"AL={als[True]:.3f}")
+    row("table5/trainable", als[False] * 1e6,
+        f"AL={als[False]:.3f} delta={d:+.1f}%")
+    return als
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,22 @@
+"""Paper Table 6 — training vs inference speculation depth (§4.4):
+K_train=8 > K_infer=5 beats matched K_train=5 by ~+4%."""
+from benchmarks.common import eval_engine, row, train_drafter
+
+
+def run(epochs=15):
+    als = {}
+    for k_tr in (5, 8):
+        tag = "table3_shared" if k_tr == 5 else f"table6_ktr{k_tr}"
+        dcfg, dparams, _ = train_drafter(
+            tag, epochs=epochs, n_layers=2, k_train=k_tr)
+        r = eval_engine("qwen2-1.5b", dcfg, dparams, K=5)
+        als[k_tr] = r["acceptance_length"]
+    d = (als[8] - als[5]) / als[5] * 100
+    row("table6/ktr5_kinf5", als[5] * 1e6, f"AL={als[5]:.3f}")
+    row("table6/ktr8_kinf5", als[8] * 1e6,
+        f"AL={als[8]:.3f} delta={d:+.1f}%")
+    return als
+
+
+if __name__ == "__main__":
+    run()

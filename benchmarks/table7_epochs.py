@@ -1,0 +1,22 @@
+"""Paper Table 7 — extended training duration (§4.5): parallel drafting
+keeps improving with epochs (harder attention-based learning problem)."""
+from benchmarks.common import eval_engine, row, train_drafter
+
+
+def run(stages=(6, 14, 22)):
+    als = {}
+    for ep in stages:
+        tag = "table3_shared" if ep == 22 else f"table7_ep{ep}"
+        dcfg, dparams, _ = train_drafter(
+            tag, epochs=ep, n_layers=2, k_train=5)
+        r = eval_engine("qwen2-1.5b", dcfg, dparams, K=5)
+        als[ep] = r["acceptance_length"]
+    base = als[stages[0]]
+    for ep, al in als.items():
+        row(f"table7/epochs_{ep}", al * 1e6,
+            f"AL={al:.3f} delta={(al - base) / base * 100:+.1f}%")
+    return als
+
+
+if __name__ == "__main__":
+    run()

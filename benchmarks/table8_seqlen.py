@@ -1,0 +1,23 @@
+"""Paper Table 8 — longer training sequences help (§4.6), modestly for
+non-reasoning targets."""
+from benchmarks.common import eval_engine, get_corpus, row, train_drafter
+
+
+def run(epochs=15, lens=(24, 48)):
+    als = {}
+    for n in lens:
+        corpus = get_corpus("qwen2-1.5b", n_seqs=64, seq_len=n)
+        tag = "table3_shared" if n == 48 else f"table8_n{n}"
+        dcfg, dparams, _ = train_drafter(
+            tag, epochs=epochs, corpus=corpus, n_layers=2, k_train=5)
+        r = eval_engine("qwen2-1.5b", dcfg, dparams, K=5)
+        als[n] = r["acceptance_length"]
+    base = als[lens[0]]
+    for n, al in als.items():
+        row(f"table8/seqlen_{n}", al * 1e6,
+            f"AL={al:.3f} delta={(al - base) / base * 100:+.1f}%")
+    return als
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Paper Table 9 — acceptance length: AR EAGLE-3 (TTT+HCA, 1 layer, the
+paper's strong baseline) vs P-EAGLE (4 layers) across three target models.
+The paper's claim to validate: P-EAGLE *matches or slightly exceeds* the AR
+baseline (+0-5% average) — parallel drafting does not sacrifice quality."""
+from benchmarks.common import eval_engine, row, train_drafter
+
+ARCHS = ("qwen2-1.5b", "mamba2-780m", "recurrentgemma-2b")
+
+
+def run(epochs=22):
+    out = {}
+    for arch in ARCHS:
+        dcfg_ar, dp_ar, _ = train_drafter(
+            "table9_ar_" + arch, arch=arch, epochs=epochs, n_layers=1,
+            parallel=False, ttt_steps=2, hca=True, k_train=1, cod_rate=0.99)
+        r_ar = eval_engine(arch, dcfg_ar, dp_ar, K=5, mode="ar")
+        dcfg_p, dp_p, _ = train_drafter(
+            "table9_peagle_" + arch, arch=arch, epochs=epochs, n_layers=4, k_train=8)
+        r_p = eval_engine(arch, dcfg_p, dp_p, K=5, mode="parallel")
+        al_ar, al_p = r_ar["acceptance_length"], r_p["acceptance_length"]
+        d = (al_p - al_ar) / al_ar * 100
+        row(f"table9/{arch}_ar_eagle3", al_ar * 1e6, f"AL={al_ar:.3f}")
+        row(f"table9/{arch}_peagle4L", al_p * 1e6,
+            f"AL={al_p:.3f} delta={d:+.1f}%")
+        out[arch] = (al_ar, al_p)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Scalable long-context MTP training (paper §3): COD sampling + amortized
+masks + Algorithm-1 sequence partitioning with within-sequence gradient
+accumulation. Shows the peak-attention-memory reduction and that segmented
+training reaches the same loss as whole-sequence training.
+
+    PYTHONPATH=src python examples/train_long_context.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+
+from repro.configs import DrafterConfig, get_config
+from repro.core import cod, partition
+from repro.data import MTPPipeline, markov_corpus
+from repro.models import get_model
+from repro.training import Trainer, TrainConfig
+
+
+def main():
+    n, K, r, S = 96, 6, 0.8, 4
+    tcfg = get_config("qwen2-1.5b").reduced()
+    model = get_model(tcfg)
+    tparams = model.init(jax.random.PRNGKey(0))
+    corpus = markov_corpus(0, 32, n, tcfg.vocab_size, branch=2)
+
+    M = cod.expanded_length(n, K, r)
+    rng = np.random.default_rng(0)
+    pos, depth = cod.sample_cod(rng, n, K, r)
+    segs = partition.build_segments(pos, depth, n, S)
+    full_cells = M * M
+    seg_cells = max(len(s.kv_pos) ** 2 for s in segs)
+    print(f"seq n={n} K={K} r={r}: expanded M={M}")
+    print(f"attention cells: whole={full_cells:,}  "
+          f"max-segment (S={S})={seg_cells:,}  "
+          f"reduction={full_cells / seg_cells:.1f}x")
+    print(f"dependencies preserved: "
+          f"{partition.check_dependencies_preserved(segs, pos, depth)}")
+
+    dcfg = DrafterConfig(n_layers=1, k_train=K, cod_rate=r).resolve(tcfg)
+    for segments, tag in ((1, "whole-sequence"), (S, f"segmented S={S}")):
+        pipe = MTPPipeline(corpus, k_train=K, cod_rate=r, batch=8, seed=0,
+                           segments=segments)
+        tr = Trainer(tcfg, dcfg, tparams, TrainConfig(lr=2e-3,
+                                                      total_steps=40))
+        log = tr.train(pipe, epochs=8)
+        print(f"{tag:20s}: loss {log[0]['loss']:.3f} -> {log[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

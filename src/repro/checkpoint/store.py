@@ -1,0 +1,87 @@
+"""Pytree checkpointing: flattened-path npz + json metadata.
+
+Layout: <dir>/step_<N>/<name>.npz — one npz per named pytree (drafter
+params, optimizer state, ...), keys are '/'-joined tree paths, so restore
+round-trips any nested dict/NamedTuple structure produced by this codebase.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for pe in path:
+        parts.append(str(getattr(pe, "key", getattr(pe, "idx", getattr(pe, "name", pe)))))
+    return "/".join(parts)
+
+
+def _to_numpy(leaf):
+    """bfloat16 has no native numpy dtype — store as a uint16 view and
+    record the logical dtype in metadata."""
+    arr = jax.device_get(leaf)
+    if str(arr.dtype) == "bfloat16":
+        return np.asarray(arr.view(np.uint16)), "bfloat16"
+    return np.asarray(arr), str(arr.dtype)
+
+
+def save_pytree(tree: Any, directory: str, name: str, step: int,
+                metadata: Optional[dict] = None) -> str:
+    d = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    arrays, dtypes = {}, {}
+    for p, l in flat:
+        key = _path_str(p)
+        arrays[key], dtypes[key] = _to_numpy(l)
+    fn = os.path.join(d, f"{name}.npz")
+    np.savez(fn, **arrays)
+    meta = dict(metadata or {})
+    meta["step"] = step
+    meta["dtypes"] = dtypes
+    with open(os.path.join(d, f"{name}.meta.json"), "w") as f:
+        json.dump(meta, f)
+    return fn
+
+
+def load_pytree(template: Any, directory: str, name: str,
+                step: Optional[int] = None) -> Any:
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    base = os.path.join(directory, f"step_{step:08d}")
+    fn = os.path.join(base, f"{name}.npz")
+    data = np.load(fn)
+    dtypes = {}
+    meta_fn = os.path.join(base, f"{name}.meta.json")
+    if os.path.exists(meta_fn):
+        with open(meta_fn) as f:
+            dtypes = json.load(f).get("dtypes", {})
+    flat, tdef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, tmpl in flat:
+        key = _path_str(p)
+        arr = data[key]
+        if dtypes.get(key) == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {tmpl.shape}")
+        leaves.append(jax.numpy.asarray(arr).astype(tmpl.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"step_(\d+)$", f))]
+    return max(steps) if steps else None

@@ -1,0 +1,42 @@
+"""Config registry: ``get_config("<arch-id>")`` and the input-shape table."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (
+    HW, INPUT_SHAPES, DrafterConfig, HybridConfig, InputShape, ModelConfig,
+    MoEConfig, SSMConfig,
+)
+
+_ARCH_MODULES = {
+    "whisper-base": "whisper_base",
+    "dbrx-132b": "dbrx_132b",
+    "mamba2-780m": "mamba2_780m",
+    "internvl2-1b": "internvl2_1b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "gemma-7b": "gemma_7b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "minitron-4b": "minitron_4b",
+    "gemma2-27b": "gemma2_27b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+__all__ = [
+    "ARCH_IDS", "HW", "INPUT_SHAPES", "DrafterConfig", "HybridConfig",
+    "InputShape", "ModelConfig", "MoEConfig", "SSMConfig", "all_configs",
+    "get_config",
+]

@@ -1,0 +1,208 @@
+"""Configuration system for target architectures, drafters, and input shapes.
+
+Every assigned architecture gets a ``ModelConfig`` in ``repro/configs/<id>.py``
+citing its source. Reduced variants (for CPU smoke tests) are derived with
+``reduced()``. Input shapes are global, paper-assigned workload points.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0
+    top_k: int = 0
+    # Which layers are MoE: "all" (DBRX) or "interleaved" (Llama-4: every 2nd).
+    pattern: str = "all"
+    n_shared_experts: int = 0          # Llama-4 has a shared expert
+    capacity_factor: float = 1.25
+    router_z_weight: float = 1e-3      # router z-loss (load-balance aux)
+    aux_loss_weight: float = 1e-2
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    expand: int = 2
+    head_dim: int = 64
+    chunk_size: int = 128              # SSD chunked-scan block
+    conv_width: int = 4
+    dt_rank: int = 0                   # unused by mamba2 (scalar dt per head)
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    """RecurrentGemma-style RG-LRU + local attention."""
+    lru_width: int = 0                 # defaults to d_model
+    block_pattern: Tuple[str, ...] = ("recurrent", "recurrent", "attention")
+    conv_width: int = 4
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                        # dense | moe | ssm | hybrid | encdec | vlm
+    source: str                        # citation
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # --- MLP / norm ---
+    mlp_variant: str = "swiglu"        # swiglu | geglu | relu2 | gelu
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    embed_scale: bool = False          # gemma scales embeddings by sqrt(d)
+
+    # --- attention ---
+    attn_pattern: Tuple[str, ...] = ("global",)   # cycled over layers
+    window_size: int = 4096
+    logit_softcap: float = 0.0         # gemma2 attn softcap
+    final_softcap: float = 0.0         # gemma2 final-logit softcap
+    qkv_bias: bool = False             # qwen2
+    post_norms: bool = False           # gemma2 post-attn/post-ffn norms
+    nope_on_global: bool = False       # llama-4 iRoPE: global layers skip RoPE
+    rope_theta: float = 10_000.0
+    query_scale: Optional[float] = None  # default 1/sqrt(head_dim)
+    positional: str = "rope"           # rope | sinusoidal (whisper)
+
+    # --- family extensions ---
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    ssm: SSMConfig = field(default_factory=SSMConfig)
+    hybrid: HybridConfig = field(default_factory=HybridConfig)
+
+    # --- encoder-decoder (whisper) ---
+    n_encoder_layers: int = 0
+    encoder_seq: int = 1500            # mel frames after conv frontend (stub)
+
+    # --- vlm ---
+    vision_tokens: int = 0             # patch embeddings prepended (stub frontend)
+    vision_dim: int = 0                # raw ViT dim before projector
+
+    # --- long-context handling for long_500k ---
+    # "native"        : arch family is sub-quadratic / locally-bounded already
+    # "sliding_window": beyond-spec rolling-KV variant enabled for long_500k
+    # "skip"          : documented skip (DESIGN.md §4)
+    long_context: str = "sliding_window"
+    long_window: int = 8192
+
+    # --- numerics ---
+    dtype: str = "bfloat16"
+    use_pallas: bool = False           # TPU path; CPU dry-run uses blocked jnp
+
+    def q_scale(self) -> float:
+        return self.query_scale if self.query_scale is not None else self.head_dim ** -0.5
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all ten assigned archs have a decoder (whisper is enc-dec)
+
+    def attn_kind(self, layer_idx: int) -> str:
+        return self.attn_pattern[layer_idx % len(self.attn_pattern)]
+
+    def is_moe_layer(self, layer_idx: int) -> bool:
+        if self.moe.n_experts == 0:
+            return False
+        if self.moe.pattern == "all":
+            return True
+        return layer_idx % 2 == 1      # interleaved: odd layers are MoE
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ModelConfig":
+        """CPU-smoke variant of the same family: 2 layers, d_model<=256, <=4 experts."""
+        d = min(self.d_model, 256)
+        heads = min(self.n_heads, 4)
+        kv = max(1, min(self.n_kv_heads, heads))
+        hd = 32
+        kw = dict(
+            n_layers=2, d_model=d, n_heads=heads, n_kv_heads=kv, head_dim=hd,
+            d_ff=min(self.d_ff, 512) or 0, vocab_size=min(self.vocab_size, 1024),
+            dtype="float32", window_size=min(self.window_size, 64),
+            long_window=64, encoder_seq=16 if self.n_encoder_layers else self.encoder_seq,
+            n_encoder_layers=2 if self.n_encoder_layers else 0,
+            vision_tokens=8 if self.vision_tokens else 0,
+            vision_dim=64 if self.vision_dim else 0,
+        )
+        if self.moe.n_experts:
+            # capacity_factor=n_experts => capacity >= T*top_k: no token drops,
+            # so cached decode matches the full forward exactly in tests.
+            kw["moe"] = dataclasses.replace(
+                self.moe, n_experts=4, top_k=min(self.moe.top_k, 2),
+                capacity_factor=4.0)
+        if self.family == "ssm":
+            kw["ssm"] = dataclasses.replace(self.ssm, d_state=16, head_dim=16, chunk_size=8)
+        if self.family == "hybrid":
+            kw["hybrid"] = dataclasses.replace(self.hybrid, lru_width=d)
+        return self.replace(**kw)
+
+
+@dataclass(frozen=True)
+class DrafterConfig:
+    """P-EAGLE / AR-EAGLE drafter riding on a target ModelConfig."""
+    n_layers: int = 4                  # paper §4.2: 4 layers for P-EAGLE
+    d_model: int = 0                   # 0 => target d_model
+    n_heads: int = 0                   # 0 => derived (d_model // 128, min 4)
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0                      # 0 => ~3.5 * d_model rounded to 128
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+
+    # P-EAGLE specifics (paper §2)
+    parallel: bool = True              # False => AR EAGLE-3 baseline
+    k_train: int = 8                   # paper §4.4: train K=8
+    k_infer: int = 5
+    cod_rate: float = 0.8              # COD retention ratio r (paper §5.1)
+    hidden_state_variant: str = "shared"
+    # shared | depth_encoding | ntp_hidden | ntp_hidden_depth | regularized
+    freeze_embeddings: bool = False    # paper §4.3: unfreeze (+5%)
+    num_taps: int = 3                  # hidden states from layers 2, L/2, L-1
+    # AR-baseline training options
+    ttt_steps: int = 3                 # EAGLE-3 training-time-test unroll
+    hca: bool = True                   # harmonized context alignment loss
+    remat: bool = False                # checkpoint drafter blocks (training)
+    flash_train: bool = True           # custom-VJP flash MTP attention
+
+    def resolve(self, target: ModelConfig) -> "DrafterConfig":
+        d = self.d_model or target.d_model
+        heads = self.n_heads or max(4, d // 128)
+        hd = self.head_dim or (d // heads)
+        ff = self.d_ff or max(128, int(3.5 * d) // 128 * 128)
+        return dataclasses.replace(
+            self, d_model=d, n_heads=heads, n_kv_heads=self.n_kv_heads or heads,
+            head_dim=hd, d_ff=ff)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                          # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k":    InputShape("train_4k",    4_096,   256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768,   32, "prefill"),
+    "decode_32k":  InputShape("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   InputShape("long_500k",  524_288,    1, "decode"),
+}
+
+# TPU v5e hardware model for the roofline (assignment constants).
+HW = dict(
+    peak_flops=197e12,        # bf16 FLOP/s per chip
+    hbm_bw=819e9,             # B/s per chip
+    ici_bw=50e9,              # B/s per link
+)

@@ -1,0 +1,29 @@
+"""recurrentgemma-2b [hybrid] — RG-LRU + local attention, 1:2. [arXiv:2402.19427]
+
+26L (but Griffin-2b is 26 blocks in pattern recurrent,recurrent,attention),
+d_model=2560, 10 heads (GQA kv=1 => MQA), d_ff=7680 (GeGLU), vocab=256000,
+lru_width=2560, local attention window 2048. O(1) recurrent state + bounded
+window => long_500k native.
+"""
+from repro.configs.base import ModelConfig, HybridConfig
+
+CONFIG = ModelConfig(
+    arch_id="recurrentgemma-2b",
+    family="hybrid",
+    source="arXiv:2402.19427 (Griffin / RecurrentGemma)",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    mlp_variant="geglu",
+    embed_scale=True,
+    tie_embeddings=True,
+    attn_pattern=("local",),
+    window_size=2048,
+    hybrid=HybridConfig(lru_width=2560,
+                        block_pattern=("recurrent", "recurrent", "attention")),
+    long_context="native",
+)

@@ -1,0 +1,3 @@
+from repro.core import cod, drafter, losses, masks, partition, spec_decode
+
+__all__ = ["cod", "drafter", "losses", "masks", "partition", "spec_decode"]

@@ -1,0 +1,343 @@
+"""P-EAGLE drafter (paper §2) and the AR EAGLE-3 baseline.
+
+The drafter is a LLaMA-3-style transformer conditioned on target hidden
+states: taps from target layers (2, L/2, L-1) are concatenated (3·D_t),
+projected by ``fc`` to the drafter width, fused with the token embedding
+through ``fuse`` ([emb; hidden] → D), then run through N blocks.
+
+Position pairing follows EAGLE: drafter RoPE position p carries
+(taps[p], emb(token[p+1])) and predicts token[p+2]. An MTP position at depth
+g (RoPE p, anchor a = p − g) lacks both inputs and substitutes the learnable
+``h_shared`` for the hidden and the mask-token embedding for the token; it
+predicts token[p+2] = the (g+1)-th token after the committed context.
+
+Hidden-state variants (paper §4.1 / Appendix B.2):
+  shared           — h_shared                                  (the winner)
+  depth_encoding   — h_shared + e_depth[g]
+  ntp_hidden       — h_shared + proj(fc(taps[anchor]))
+  ntp_hidden_depth — h_shared + proj(fc(taps[anchor])) + e_depth[g]
+  regularized      — h_shared + α · dropout(proj(fc(taps[anchor])))
+
+Parallel drafting at inference needs no special mask: the K draft slots form
+a single chain (equal anchors), for which the closed-form MTP predicate
+degenerates to plain causal attention over [cache ∪ block]; only the NTP
+slot is committed to the drafter KV cache (depth-0 semantics).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DrafterConfig, ModelConfig
+from repro.core.masks import mtp_mask_predicate
+from repro.models import layers as L
+from repro.sharding.utils import shard_hint
+
+Array = jax.Array
+
+
+def mask_token_id(tcfg: ModelConfig) -> int:
+    return tcfg.vocab_size - 1          # reserved unused id (paper §4.3)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_params(dcfg: DrafterConfig, tcfg: ModelConfig, key: Array,
+                dtype=jnp.float32) -> dict:
+    d = dcfg.d_model
+    ks = jax.random.split(key, 8)
+
+    def block_init(k):
+        ka, km = jax.random.split(k)
+        return {
+            "ln1": jnp.ones((d,), jnp.float32),
+            "ln2": jnp.ones((d,), jnp.float32),
+            "attn": {
+                "wq": L.dense_init(jax.random.fold_in(ka, 0), (d, dcfg.n_heads * dcfg.head_dim), dtype=dtype),
+                "wk": L.dense_init(jax.random.fold_in(ka, 1), (d, dcfg.n_kv_heads * dcfg.head_dim), dtype=dtype),
+                "wv": L.dense_init(jax.random.fold_in(ka, 2), (d, dcfg.n_kv_heads * dcfg.head_dim), dtype=dtype),
+                "wo": L.dense_init(jax.random.fold_in(ka, 3), (dcfg.n_heads * dcfg.head_dim, d), dtype=dtype),
+            },
+            "mlp": L.mlp_init(km, d, dcfg.d_ff, "swiglu", dtype),
+        }
+
+    params = {
+        "embed": L.embed_init(ks[0], tcfg.vocab_size, d, dtype),
+        "fc": L.dense_init(ks[1], (dcfg.num_taps * tcfg.d_model, d), dtype=dtype),
+        "fuse": L.dense_init(ks[2], (2 * d, d), dtype=dtype),
+        "h_shared": 0.02 * jax.random.normal(ks[3], (d,), jnp.float32).astype(dtype),
+        "blocks": jax.vmap(block_init)(jax.random.split(ks[4], dcfg.n_layers)),
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "lm_head": L.dense_init(ks[5], (d, tcfg.vocab_size), dtype=dtype),
+    }
+    v = dcfg.hidden_state_variant
+    if v in ("depth_encoding", "ntp_hidden_depth"):
+        params["depth_emb"] = 0.02 * jax.random.normal(
+            ks[6], (max(dcfg.k_train, dcfg.k_infer) + 1, d), jnp.float32).astype(dtype)
+    if v in ("ntp_hidden", "ntp_hidden_depth", "regularized"):
+        params["ntp_proj"] = L.dense_init(ks[7], (d, d), dtype=dtype)
+    if v == "regularized":
+        params["alpha"] = jnp.asarray(0.1, jnp.float32)   # init per App. B.2
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _block_apply(dcfg: DrafterConfig, p: dict, x: Array, *,
+                 positions: Array, mask_fn, cache: Optional[dict],
+                 mode: str, flash_meta=None) -> Tuple[Array, Optional[dict]]:
+    B, T, D = x.shape
+    H, KV, hd = dcfg.n_heads, dcfg.n_kv_heads, dcfg.head_dim
+    h = L.rms_norm(x, p["ln1"], dcfg.norm_eps)
+    q = (h @ p["attn"]["wq"]).reshape(B, T, H, hd)
+    k = (h @ p["attn"]["wk"]).reshape(B, T, KV, hd)
+    v = (h @ p["attn"]["wv"]).reshape(B, T, KV, hd)
+    rp = jnp.maximum(positions, 0)
+    sin, cos = L.rope_sincos(rp, hd, dcfg.rope_theta)
+    q = L.apply_rope(q, sin, cos)
+    k = L.apply_rope(k, sin, cos)
+    q = shard_hint(q, ("pod", "data"), None, "model")
+
+    new_cache = cache
+    if mode == "train":
+        if flash_meta is not None:
+            # flash fwd + custom-VJP bwd: O(M·bk) training attention memory
+            # instead of O(M²) scan residuals (core/flash_train.py).
+            from repro.core.flash_train import mtp_flash_attention
+            out = mtp_flash_attention(q, k, v, flash_meta[0], flash_meta[1],
+                                      scale=hd ** -0.5)
+        else:
+            out = L.blocked_attention(q, k, v, scale=hd ** -0.5,
+                                      mask_fn=mask_fn)
+    else:
+        # inference: attend [old cache] + [current block] two-phase (LSE
+        # merge — no cache copy); block entries are a single chain so plain
+        # causal-by-position masking applies (see module docstring).
+        old_kpos = jnp.where(cache["positions"] >= positions[:, :1], -1,
+                             cache["positions"])
+        o1, m1, l1 = L.blocked_attention(
+            q, cache["k"].astype(q.dtype), cache["v"].astype(q.dtype),
+            scale=hd ** -0.5, mask_fn=L.cache_mask_fn(positions, old_kpos),
+            return_stats=True)
+        o2, m2, l2 = L.blocked_attention(
+            q, k, v, scale=hd ** -0.5,
+            mask_fn=L.cache_mask_fn(positions, positions),
+            return_stats=True)
+        out = L.merge_attention(o1, m1, l1, o2, m2, l2)
+        if mode == "draft":
+            # commit only slot 0 (the NTP position) to the cache
+            new_cache = L.cache_update(cache, k[:, :1], v[:, :1],
+                                       positions[:, 0])
+        else:                    # extend: commit all (depth-0 tokens)
+            new_cache = L.cache_update(cache, k, v, positions[:, 0])
+    out = out.reshape(B, T, H * hd) @ p["attn"]["wo"]
+    x = x + out
+    h = L.rms_norm(x, p["ln2"], dcfg.norm_eps)
+    x = x + L.mlp_apply(p["mlp"], h, "swiglu")
+    return x, new_cache
+
+
+def _run_blocks(dcfg, params, x, *, positions, mask_fn, cache, mode,
+                flash_meta=None):
+    if cache is None:
+        def body(x, bp):
+            x, _ = _block_apply(dcfg, bp, x, positions=positions,
+                                mask_fn=mask_fn, cache=None, mode=mode,
+                                flash_meta=flash_meta)
+            return x, None
+        if dcfg.remat and mode == "train":
+            body = jax.checkpoint(body)   # block-boundary activation remat
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        return x, None
+
+    def body(x, xs):
+        bp, bc = xs
+        x, nc = _block_apply(dcfg, bp, x, positions=positions,
+                             mask_fn=mask_fn, cache=bc, mode=mode)
+        return x, nc
+    x, ncache = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+    return x, {"blocks": ncache}
+
+
+def _head(dcfg, params, x):
+    h = L.rms_norm(x, params["final_norm"], dcfg.norm_eps)
+    logits = (h @ params["lm_head"]).astype(jnp.float32)
+    # keep the vocab dim model-sharded — replicated f32 MTP-expanded logits
+    # are ~20 GB/chip at the train_4k shape (§Perf pair A, iteration 3)
+    logits = shard_hint(logits, ("pod", "data"), None, "model")
+    return logits, h
+
+
+def make_cache(dcfg: DrafterConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    per = L.make_kv_cache(batch, max_len, dcfg.n_kv_heads, dcfg.head_dim,
+                          dtype=dtype, ring=False)
+    return {"blocks": jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (dcfg.n_layers,) + a.shape).copy(), per)}
+
+
+# ---------------------------------------------------------------------------
+# input construction
+# ---------------------------------------------------------------------------
+
+def _hidden_inputs(dcfg: DrafterConfig, params: dict, fc_taps: Array,
+                   depth: Array, anchor_fc: Array, *,
+                   rng: Optional[Array]) -> Array:
+    """Per-position drafter 'hidden' input: fc(taps) at depth 0, the variant
+    formula at MTP depths. fc_taps (B,M,D) is fc(taps) gathered at each
+    position p; anchor_fc (B,M,D) is fc(taps) gathered at each anchor."""
+    v = dcfg.hidden_state_variant
+    h = jnp.broadcast_to(params["h_shared"].astype(fc_taps.dtype),
+                         fc_taps.shape)
+    if v in ("depth_encoding", "ntp_hidden_depth"):
+        de = params["depth_emb"][jnp.clip(depth, 0, params["depth_emb"].shape[0] - 1)]
+        h = h + de.astype(h.dtype)
+    if v in ("ntp_hidden", "ntp_hidden_depth", "regularized"):
+        inj = anchor_fc @ params["ntp_proj"]
+        if v == "regularized":
+            if rng is not None:
+                keep = jax.random.bernoulli(rng, 0.9, inj.shape)
+                inj = inj * keep / 0.9
+            inj = params["alpha"].astype(inj.dtype) * inj
+        h = h + inj
+    is_ntp = depth == 0                     # (M,) or (B, M)
+    if is_ntp.ndim == 1:
+        is_ntp = is_ntp[None, :]
+    return jnp.where(is_ntp[..., None], fc_taps, h)
+
+
+def embed_tokens(dcfg: DrafterConfig, params: dict, tok: Array) -> Array:
+    emb = params["embed"]
+    if dcfg.freeze_embeddings:
+        emb = jax.lax.stop_gradient(emb)
+    return emb[tok]
+
+
+# ---------------------------------------------------------------------------
+# training forward (MTP, full or segment)
+# ---------------------------------------------------------------------------
+
+def mtp_forward(dcfg: DrafterConfig, tcfg: ModelConfig, params: dict,
+                tokens: Array, taps: Array, pos: Array, depth: Array, *,
+                rng: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Training forward over COD-expanded positions.
+
+    tokens (B, n) original sequence; taps (B, n, num_taps·D_t) target taps;
+    pos/depth (M,) shared or (B, M) per-row expanded metadata (padding: -1).
+    Returns (logits (B,M,V), hidden (B,M,D))."""
+    B, n = tokens.shape
+    if pos.ndim == 1:
+        pos = jnp.broadcast_to(pos[None], (B, pos.shape[0]))
+        depth = jnp.broadcast_to(depth[None], (B, depth.shape[0]))
+    safe_pos = jnp.clip(pos, 0, n - 1)
+    anchor = jnp.clip(pos - jnp.maximum(depth, 0), 0, n - 1)
+
+    fc_all = taps.astype(params["fc"].dtype) @ params["fc"]     # (B, n, D)
+    fc_at = jnp.take_along_axis(fc_all, safe_pos[..., None], axis=1)
+    fc_anchor = jnp.take_along_axis(fc_all, anchor[..., None], axis=1)
+    hid = _hidden_inputs(dcfg, params, fc_at, depth, fc_anchor, rng=rng)
+
+    tok_in = jnp.take_along_axis(tokens, jnp.clip(safe_pos + 1, 0, n - 1),
+                                 axis=1)
+    tok_in = jnp.where(depth == 0, tok_in, mask_token_id(tcfg))
+    emb = embed_tokens(dcfg, params, tok_in)
+
+    x = jnp.concatenate([emb, hid], axis=-1) @ params["fuse"]
+    x = shard_hint(x, ("pod", "data"), None, None)
+
+    def mask_fn(q_idx, k_idx):
+        qd = jnp.take(depth, q_idx, axis=1)            # (B, Sq)
+        qp = jnp.take(pos, q_idx, axis=1)
+        kd = jnp.take(depth, k_idx, axis=1)            # (B, Bk)
+        kp = jnp.take(pos, k_idx, axis=1)
+        ok = jax.vmap(lambda a, b, c, d: mtp_mask_predicate(
+            a, b, c, d, np_mod=jnp))(qd, qp, kd, kp)   # (B, Sq, Bk)
+        return ok[:, None, None]
+
+    positions = jnp.maximum(pos, 0)
+    # use the flash custom-VJP attention when the expanded length is large
+    # enough that O(M²) scan residuals would dominate training memory
+    flash_meta = (pos, depth) if (dcfg.flash_train
+                                  and pos.shape[-1] >= 512) else None
+    x, _ = _run_blocks(dcfg, params, x, positions=positions, mask_fn=mask_fn,
+                       cache=None, mode="train", flash_meta=flash_meta)
+    logits, hidden = _head(dcfg, params, x)
+    return logits, hidden
+
+
+# ---------------------------------------------------------------------------
+# inference: extend / parallel draft / AR draft
+# ---------------------------------------------------------------------------
+
+def extend(dcfg: DrafterConfig, tcfg: ModelConfig, params: dict, cache: dict,
+           tokens_next: Array, taps: Array, positions: Array) -> dict:
+    """Commit T depth-0 positions: position p carries (taps[p], emb(t_{p+1})).
+
+    tokens_next (B, T) = tokens p+1 aligned to taps (B, T, 3D_t);
+    positions (B, T)."""
+    fc = taps.astype(params["fc"].dtype) @ params["fc"]
+    emb = embed_tokens(dcfg, params, tokens_next)
+    x = jnp.concatenate([emb, fc], axis=-1) @ params["fuse"]
+    _, ncache = _run_blocks(dcfg, params, x, positions=positions,
+                            mask_fn=None, cache=cache, mode="extend")
+    return ncache
+
+
+def draft_block_inputs(dcfg, tcfg, params, token_next, taps_last, anchor_pos, K):
+    """Build the K-slot parallel draft block (slot 0 = NTP, 1..K-1 = MTP)."""
+    B = token_next.shape[0]
+    fc = taps_last.astype(params["fc"].dtype) @ params["fc"]    # (B, D)
+    fc = fc[:, None]                                            # (B, 1, D)
+    depth = jnp.arange(K, dtype=jnp.int32)
+    fc_b = jnp.broadcast_to(fc, (B, K, fc.shape[-1]))
+    hid = _hidden_inputs(dcfg, params, fc_b, depth, fc_b, rng=None)
+    tok = jnp.where((depth == 0)[None, :], token_next[:, None],
+                    mask_token_id(tcfg))
+    emb = embed_tokens(dcfg, params, tok)
+    x = jnp.concatenate([emb, hid], axis=-1) @ params["fuse"]
+    positions = anchor_pos[:, None] + depth[None, :]
+    return x, positions
+
+
+def draft_parallel(dcfg: DrafterConfig, tcfg: ModelConfig, params: dict,
+                   cache: dict, token_next: Array, taps_last: Array,
+                   anchor_pos: Array, K: int):
+    """P-EAGLE: one forward pass drafts K tokens (chain decoding).
+
+    Returns (draft_tokens (B,K), draft_logits (B,K,V), new cache)."""
+    x, positions = draft_block_inputs(dcfg, tcfg, params, token_next,
+                                      taps_last, anchor_pos, K)
+    x, ncache = _run_blocks(dcfg, params, x, positions=positions,
+                            mask_fn=None, cache=cache, mode="draft")
+    logits, _ = _head(dcfg, params, x)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), logits, ncache
+
+
+def draft_ar(dcfg: DrafterConfig, tcfg: ModelConfig, params: dict,
+             cache: dict, token_next: Array, taps_last: Array,
+             anchor_pos: Array, K: int):
+    """AR EAGLE-3 baseline: K sequential single-position forwards; step i
+    feeds (token d_i, drafter hidden h_i) into step i+1."""
+    B = token_next.shape[0]
+    fc = (taps_last.astype(params["fc"].dtype) @ params["fc"])  # (B, D)
+
+    def step(carry, i):
+        cache, tok, hid = carry
+        emb = embed_tokens(dcfg, params, tok[:, None])          # (B,1,D)
+        x = jnp.concatenate([emb, hid[:, None]], axis=-1) @ params["fuse"]
+        positions = (anchor_pos + i)[:, None]
+        x, ncache = _run_blocks(dcfg, params, x, positions=positions,
+                                mask_fn=None, cache=cache, mode="extend")
+        logits, h = _head(dcfg, params, x)
+        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        return (ncache, nxt, h[:, 0]), (nxt, logits[:, 0])
+
+    (cache, _, _), (toks, logits) = jax.lax.scan(
+        step, (cache, token_next, fc), jnp.arange(K))
+    return toks.swapaxes(0, 1), logits.swapaxes(0, 1), cache

@@ -1,0 +1,143 @@
+"""Memory-efficient training attention: flash forward + custom-VJP flash
+backward (recompute-by-block), for the drafter's MTP attention.
+
+Why: differentiating the online-softmax ``lax.scan`` stores per-block
+probability residuals — O(M²) floats per layer. At the paper's training
+configuration (n=4096, K_train=8 → M≈17k expanded positions) that is tens
+of GB per chip and dominates the train_4k memory roofline (§Perf pair A
+baseline). The flash backward stores only (out, m, l) and recomputes
+probabilities blockwise: attention training memory drops O(M²) → O(M·bk).
+
+Masking uses the closed-form MTP predicate evaluated from (pos, depth)
+int32 metadata — the same beyond-paper closed form as the Pallas kernel
+(kernels/mtp_attention.py); integer metadata gets None cotangents.
+"""
+from __future__ import annotations
+
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masks import mtp_mask_predicate
+from repro.models.layers import NEG_INF
+
+Array = jax.Array
+
+
+def _mask_block(pos, depth, q_idx, k_idx):
+    """(B,M) metadata -> bool (B,1,1,Sq,Bk) via the closed-form predicate."""
+    qd = jnp.take(depth, q_idx, axis=1)
+    qp = jnp.take(pos, q_idx, axis=1)
+    kd = jnp.take(depth, k_idx, axis=1)
+    kp = jnp.take(pos, k_idx, axis=1)
+    ok = jax.vmap(lambda a, b, c, d: mtp_mask_predicate(
+        a, b, c, d, np_mod=jnp))(qd, qp, kd, kp)
+    return ok[:, None, None]
+
+
+def _fwd_pass(q, k, v, pos, depth, scale, bk):
+    B, M, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    nb = M // bk
+    qr = q.reshape(B, M, KV, G, hd)
+    kb = k.reshape(B, nb, bk, KV, hd).swapaxes(0, 1)
+    vb = v.reshape(B, nb, bk, KV, hd).swapaxes(0, 1)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        j, kj, vj = inp
+        s = jnp.einsum("bqkgd,bjkd->bkgqj", qr, kj,
+                       preferred_element_type=jnp.float32) * scale
+        ok = _mask_block(pos, depth, jnp.arange(M), j * bk + jnp.arange(bk))
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.where(ok, jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqj,bjkd->bkgqd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, KV, G, M), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, M), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, M, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (jnp.arange(nb), kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.where((l > 0)[..., None], out, 0.0)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, M, H, hd).astype(q.dtype)
+    return out, m, l
+
+
+@lru_cache(maxsize=None)
+def _make(scale: float, bk: int):
+    @jax.custom_vjp
+    def fn(q, k, v, pos, depth):
+        out, _, _ = _fwd_pass(q, k, v, pos, depth, scale, bk)
+        return out
+
+    def fwd(q, k, v, pos, depth):
+        out, m, l = _fwd_pass(q, k, v, pos, depth, scale, bk)
+        return out, (q, k, v, pos, depth, out, m, l)
+
+    def bwd(res, do):
+        q, k, v, pos, depth, out, m, l = res
+        B, M, H, hd = q.shape
+        KV = k.shape[2]
+        G = H // KV
+        nb = M // bk
+        qr = q.reshape(B, M, KV, G, hd)
+        dor = do.reshape(B, M, KV, G, hd)
+        # D_i = rowsum(dO * O)
+        Drow = jnp.einsum("bqkgd,bqkgd->bkgq", dor.astype(jnp.float32),
+                          out.reshape(B, M, KV, G, hd).astype(jnp.float32))
+        linv = 1.0 / jnp.maximum(l, 1e-30)
+        kb = k.reshape(B, nb, bk, KV, hd).swapaxes(0, 1)
+        vb = v.reshape(B, nb, bk, KV, hd).swapaxes(0, 1)
+
+        def body(dq, inp):
+            j, kj, vj = inp
+            s = jnp.einsum("bqkgd,bjkd->bkgqj", qr, kj,
+                           preferred_element_type=jnp.float32) * scale
+            ok = _mask_block(pos, depth, jnp.arange(M),
+                             j * bk + jnp.arange(bk))
+            s = jnp.where(ok, s, NEG_INF)
+            p = jnp.where(ok, jnp.exp(s - m[..., None]), 0.0) \
+                * linv[..., None]                          # normalized probs
+            dv_j = jnp.einsum("bkgqj,bqkgd->bjkd", p.astype(jnp.float32),
+                              dor.astype(jnp.float32))
+            dp = jnp.einsum("bqkgd,bjkd->bkgqj", dor, vj,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - Drow[..., None]) * scale
+            dq = dq + jnp.einsum("bkgqj,bjkd->bqkgd", ds.astype(kj.dtype),
+                                 kj, preferred_element_type=jnp.float32)
+            dk_j = jnp.einsum("bkgqj,bqkgd->bjkd", ds.astype(jnp.float32),
+                              qr.astype(jnp.float32))
+            return dq, (dk_j, dv_j)
+
+        dq0 = jnp.zeros((B, M, KV, G, hd), jnp.float32)
+        dq, (dk_b, dv_b) = jax.lax.scan(body, dq0,
+                                        (jnp.arange(nb), kb, vb))
+        dk = dk_b.swapaxes(0, 1).reshape(B, M, KV, hd)
+        dv = dv_b.swapaxes(0, 1).reshape(B, M, KV, hd)
+        dq = dq.reshape(B, M, H, hd)
+        return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+                None, None)
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+def mtp_flash_attention(q: Array, k: Array, v: Array, pos: Array,
+                        depth: Array, *, scale: float,
+                        block_k: int = 512) -> Array:
+    """q (B,M,H,hd); k/v (B,M,KV,hd); pos/depth (B,M) int32 (-1 pad).
+    M must be a multiple of block_k' = min(block_k, divisor of M)."""
+    M = q.shape[1]
+    bk = min(block_k, M)
+    while M % bk:
+        bk -= 1
+    return _make(float(scale), int(bk))(q, k, v, pos, depth)

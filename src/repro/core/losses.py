@@ -1,0 +1,114 @@
+"""Training losses: MTP cross-entropy (per-depth weighted), EAGLE-3 TTT
+unroll for the AR baseline, and HCA (harmonized context alignment).
+
+Labels use -1 as ignore (padding / positions whose target falls off the
+sequence end)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def cross_entropy(logits: Array, labels: Array) -> Array:
+    """Per-position CE with -1 ignore; returns (B, M) with 0 at ignored."""
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return jnp.where(valid, ce, 0.0)
+
+
+def mtp_loss(logits: Array, labels: Array, depth: Array, *,
+             depth_weight_decay: float = 1.0) -> Tuple[Array, dict]:
+    """logits (B,M,V), labels (B,M), depth (M,) or (B,M). Mean CE over valid
+    positions, optionally down-weighting deeper prediction depths.
+    Metrics: overall/NTP/MTP token accuracy and per-depth accuracy sums."""
+    if depth.ndim == 1:
+        depth = depth[None, :]
+    ce = cross_entropy(logits, labels)
+    valid = (labels >= 0) & (depth >= 0)
+    w = jnp.where(depth >= 0,
+                  depth_weight_decay ** jnp.maximum(depth, 0), 0.0)
+    w = jnp.where(valid, w, 0.0)
+    loss = jnp.sum(ce * w) / jnp.maximum(jnp.sum(w), 1e-9)
+
+    pred = jnp.argmax(logits, axis=-1)
+    hit = (pred == labels) & valid
+    is_ntp = depth == 0
+    is_mtp = depth > 0
+
+    def rate(num, den):
+        return jnp.sum(num) / jnp.maximum(jnp.sum(den), 1)
+
+    metrics = {
+        "loss": loss,
+        "acc": rate(hit, valid),
+        "ntp_acc": rate(hit & is_ntp, valid & is_ntp),
+        "mtp_acc": rate(hit & is_mtp, valid & is_mtp),
+        "valid_tokens": jnp.sum(valid),
+    }
+    return loss, metrics
+
+
+def hca_loss(hidden: Array, target_feat: Array, valid: Array) -> Array:
+    """Harmonized context alignment (Zhang et al. 2024), adapted: align the
+    drafter's pre-head hidden at p with the target-conditioned feature the
+    *next* drafter position consumes (fc(taps)[p+1]) — smooth-L1."""
+    d = hidden.astype(jnp.float32) - target_feat.astype(jnp.float32)
+    ad = jnp.abs(d)
+    sl1 = jnp.where(ad < 1.0, 0.5 * d * d, ad - 0.5).mean(-1)
+    return jnp.sum(sl1 * valid) / jnp.maximum(jnp.sum(valid), 1e-9)
+
+
+def ttt_forward_loss(dcfg, tcfg, params: dict, tokens: Array, taps: Array,
+                     *, steps: Optional[int] = None,
+                     hca_weight: float = 0.1) -> Tuple[Array, dict]:
+    """EAGLE-3 training-time test for the AR baseline (paper footnote 2).
+
+    Step 0 feeds true target features; step j >= 1 replaces the hidden input
+    at position p with the drafter's own step-(j-1) hidden at p-1 — exactly
+    the mismatch the drafter sees when autoregressively chaining at
+    inference. Tokens stay teacher-forced. Losses sum across steps.
+    """
+    from repro.core import drafter as D
+    steps = steps or dcfg.ttt_steps
+    B, n = tokens.shape
+    pos = jnp.arange(n, dtype=jnp.int32)
+    depth = jnp.zeros((n,), jnp.int32)
+    labels = jnp.concatenate(
+        [tokens[:, 2:], jnp.full((B, 2), -1, tokens.dtype)], axis=1)
+
+    fc_all = taps.astype(params["fc"].dtype) @ params["fc"]
+    tok_in = jnp.concatenate(
+        [tokens[:, 1:], jnp.full((B, 1), 0, tokens.dtype)], axis=1)
+    emb = D.embed_tokens(dcfg, params, tok_in)
+    positions = jnp.broadcast_to(pos[None], (B, n))
+
+    import repro.models.layers as L
+    mask_fn = L.causal_mask_fn(positions)
+
+    total = jnp.zeros((), jnp.float32)
+    metrics = {}
+    hid_in = fc_all
+    for j in range(steps):
+        x = jnp.concatenate([emb, hid_in], axis=-1) @ params["fuse"]
+        x, _ = D._run_blocks(dcfg, params, x, positions=positions,
+                             mask_fn=mask_fn, cache=None, mode="train")
+        logits, hidden = D._head(dcfg, params, x)
+        loss, m = mtp_loss(logits, labels, depth)
+        if dcfg.hca:
+            valid = (labels >= 0).astype(jnp.float32)
+            tgt = jnp.concatenate([fc_all[:, 1:], fc_all[:, -1:]], axis=1)
+            loss = loss + hca_weight * hca_loss(hidden, tgt, valid)
+        total = total + loss
+        metrics[f"step{j}_acc"] = m["acc"]
+        # next step consumes own hiddens, shifted right by one position
+        hid_in = jnp.concatenate(
+            [fc_all[:, :1], hidden[:, :-1].astype(fc_all.dtype)], axis=1)
+    metrics["loss"] = total
+    metrics["acc"] = metrics[f"step{steps - 1}_acc"]
+    return total, metrics

@@ -1,0 +1,86 @@
+"""Speculative-decoding verification: greedy prefix matching and lossless
+rejection sampling (Leviathan et al. 2023 / Chen et al. 2023), plus the
+acceptance-length bookkeeping the paper reports.
+
+All shapes static, all rows independent — jit/pjit friendly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def greedy_verify(draft_tokens: Array,
+                  target_logits: Array) -> Tuple[Array, Array]:
+    """draft_tokens (B, K); target_logits (B, K+1, V) for positions
+    c..c+K (position c+i predicts token c+i+1).
+
+    Returns (accept_len (B,) in [0, K], committed (B, K+1)) where
+    committed[:, :accept_len+1] are the tokens to append: the accepted drafts
+    (identical to target argmax) plus the bonus/correction token.
+    """
+    t_star = jnp.argmax(target_logits, axis=-1).astype(jnp.int32)  # (B, K+1)
+    K = draft_tokens.shape[1]
+    match = draft_tokens == t_star[:, :K]
+    # accept_len = length of the all-True prefix
+    accept_len = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+    return accept_len, t_star
+
+
+def rejection_verify(key: Array, draft_tokens: Array, draft_probs: Array,
+                     target_probs: Array) -> Tuple[Array, Array]:
+    """Lossless stochastic verification.
+
+    draft_probs (B, K, V) — drafter distributions the drafts were sampled
+    from; target_probs (B, K+1, V). Token i accepted w.p.
+    min(1, p_i(d_i)/q_i(d_i)); on first rejection the replacement is sampled
+    from norm(max(p - q, 0)); if all accepted, bonus ~ p_{K}.
+
+    Returns (accept_len (B,), committed (B, K+1)).
+    """
+    B, K, V = draft_probs.shape
+    ks = jax.random.split(key, 3)
+    u = jax.random.uniform(ks[0], (B, K))
+    q_d = jnp.take_along_axis(draft_probs, draft_tokens[..., None],
+                              axis=-1)[..., 0]
+    p_d = jnp.take_along_axis(target_probs[:, :K], draft_tokens[..., None],
+                              axis=-1)[..., 0]
+    ok = u < jnp.minimum(1.0, p_d / jnp.maximum(q_d, 1e-20))
+    accept_len = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+
+    # residual distribution at the first rejected slot
+    idx = jnp.minimum(accept_len, K - 1)
+    p_rej = jnp.take_along_axis(target_probs, idx[:, None, None], axis=1)[:, 0]
+    q_rej = jnp.take_along_axis(draft_probs, idx[:, None, None], axis=1)[:, 0]
+    resid = jnp.maximum(p_rej - q_rej, 0.0)
+    resid = resid / jnp.maximum(resid.sum(-1, keepdims=True), 1e-20)
+    resample = jax.random.categorical(ks[1], jnp.log(resid + 1e-20), axis=-1)
+
+    bonus = jax.random.categorical(
+        ks[2], jnp.log(target_probs[:, K] + 1e-20), axis=-1)
+
+    committed = jnp.where(
+        jnp.arange(K + 1)[None, :] < accept_len[:, None],
+        jnp.pad(draft_tokens, ((0, 0), (0, 1))), 0).astype(jnp.int32)
+    fix = jnp.where(accept_len == K, bonus, resample).astype(jnp.int32)
+    committed = committed.at[jnp.arange(B), accept_len].set(fix)
+    return accept_len, committed
+
+
+def update_acceptance_stats(stats: dict, accept_len: Array,
+                            active: Optional[Array] = None) -> dict:
+    """Running mean of tokens committed per iteration (= accept_len + 1,
+    the paper's acceptance length)."""
+    n = accept_len.shape[0] if active is None else jnp.sum(active)
+    tok = accept_len + 1
+    tok = tok if active is None else jnp.where(active, tok, 0)
+    return {"iters": stats.get("iters", 0) + n,
+            "tokens": stats.get("tokens", 0) + jnp.sum(tok)}
+
+
+def acceptance_length(stats: dict) -> float:
+    return float(stats["tokens"]) / max(float(stats["iters"]), 1.0)

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (MTPBatch, MTPPipeline, markov_corpus,
+                                 self_generated_corpus)
+
+__all__ = ["MTPBatch", "MTPPipeline", "markov_corpus", "self_generated_corpus"]

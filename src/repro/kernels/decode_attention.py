@@ -1,0 +1,105 @@
+"""Split-K decode attention (flash-decode) for TPU.
+
+Serving hot spot: a tiny query block (the K+1 speculative verify tokens, or
+the K parallel draft slots) against a long KV cache. The sequence dimension
+is split across grid steps; each step reduces a (block_k, hd) cache tile
+against the resident (T, hd) query tile with online-softmax scratch.
+
+Cache slots carry absolute positions (-1 = empty) so ring (sliding-window)
+caches and speculative invalidation mask correctly — the same convention as
+models/layers.make_kv_cache.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, window: int,
+                   n_kv_blocks: int):
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)             # (T, hd)
+    k = k_ref[0].astype(jnp.float32)             # (block_k, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qp = qpos_ref[0][:, None]                    # (T, 1)
+    kp = kpos_ref[0][None, :]                    # (1, block_k)
+    ok = (kp <= qp) & (kp >= 0)
+    if window > 0:
+        ok &= (qp - kp) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(kj == n_kv_blocks - 1)
+    def _done():
+        l = l_scr[...]
+        out = acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
+        out = jnp.where((l > 0)[:, None], out, 0.0)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     k_positions: jax.Array, q_positions: jax.Array, *,
+                     scale: float, window: int = 0, block_k: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q (B,T,H,hd) small T; k/v (B,S,KV,hd); k_positions (B,S) int32;
+    q_positions (B,T) int32."""
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    block_k = min(block_k, S)
+    assert S % block_k == 0
+    n_kv_blocks = S // block_k
+
+    qt = q.transpose(0, 2, 1, 3)                 # (B, H, T, hd)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    grid = (B, H, n_kv_blocks)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, window=window,
+                          n_kv_blocks=n_kv_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, T), lambda b, h, j: (b, 0)),
+            pl.BlockSpec((1, block_k), lambda b, h, j: (b, j)),
+            pl.BlockSpec((1, None, T, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, None, block_k, hd),
+                         lambda b, h, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, None, block_k, hd),
+                         lambda b, h, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, None, T, hd), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, T, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((T,), jnp.float32),
+            pltpu.VMEM((T,), jnp.float32),
+            pltpu.VMEM((T, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_positions, k_positions, qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,121 @@
+"""MTP-masked flash attention — the paper's training hot spot, TPU-native.
+
+The paper (§3.1) precomputes the (n_max·K)² cross-depth mask in HBM and
+slices per example. On TPU that costs O(M²) HBM mask traffic per step. This
+kernel instead evaluates the *closed-form* predicate
+
+    attend ⇔ (g'=0 ∧ p' ≤ p−g) ∨ (p'−g' = p−g ∧ g' ≤ g)
+
+inside VMEM from two int32 metadata vectors (depth, pos) of length M —
+O(M) metadata instead of O(M²) mask bytes (DESIGN.md §3, beyond-paper
+optimization; the paper-faithful precompute+slice path lives in
+core/masks.py and is what Table-2 benchmarks compare against).
+
+Padding (depth = -1) attends nothing; its output rows are zeroed.
+
+Grid and dataflow mirror flash_attention.py; the metadata vectors ride in
+as (block,)-tiled VMEM operands.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mtp_kernel(qd_ref, qp_ref, kd_ref, kp_ref, q_ref, k_ref, v_ref, o_ref,
+                m_scr, l_scr, acc_scr, *, scale: float, block_q: int,
+                block_k: int, n_kv_blocks: int):
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qg = qd_ref[...][:, None]          # (block_q, 1) depths
+    qp = qp_ref[...][:, None]          # rope positions
+    kg = kd_ref[...][None, :]          # (1, block_k)
+    kp = kp_ref[...][None, :]
+    anchor_q = qp - qg
+    anchor_k = kp - kg
+    ok = ((kg == 0) & (kp <= anchor_q)) | ((anchor_k == anchor_q) & (kg <= qg))
+    ok &= (qg >= 0) & (kg >= 0)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    # explicit mask on p: fully-masked rows would otherwise see
+    # exp(NEG_INF - NEG_INF) = 1
+    p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(kj == n_kv_blocks - 1)
+    def _done():
+        l = l_scr[...]
+        out = acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
+        out = jnp.where((l > 0)[:, None], out, 0.0)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def mtp_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  pos: jax.Array, depth: jax.Array, *, scale: float,
+                  block_q: int = 128, block_k: int = 128,
+                  interpret: bool = False) -> jax.Array:
+    """q (B,M,H,hd); k/v (B,M,KV,hd); pos/depth (M,) int32 (-1 pad)."""
+    B, M, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    block_q = min(block_q, M)
+    block_k = min(block_k, M)
+    assert M % block_q == 0 and M % block_k == 0
+    n_kv_blocks = M // block_k
+
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    grid = (B, H, M // block_q, n_kv_blocks)
+
+    out = pl.pallas_call(
+        functools.partial(_mtp_kernel, scale=scale, block_q=block_q,
+                          block_k=block_k, n_kv_blocks=n_kv_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q,), lambda b, h, i, j: (i,)),
+            pl.BlockSpec((block_q,), lambda b, h, i, j: (i,)),
+            pl.BlockSpec((block_k,), lambda b, h, i, j: (j,)),
+            pl.BlockSpec((block_k,), lambda b, h, i, j: (j,)),
+            pl.BlockSpec((None, None, block_q, hd),
+                         lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((None, None, block_k, hd),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((None, None, block_k, hd),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, block_q, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, M, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(depth, pos, depth, pos, qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

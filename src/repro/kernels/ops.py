@@ -1,0 +1,77 @@
+"""Jit'd public wrappers around the Pallas kernels: pad-to-block, dispatch,
+unpad. On CPU backends interpret=True is selected automatically so the same
+call sites work in tests and in the TPU deployment path.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dk
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mtp_attention as _mtp
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_seq(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@partial(jax.jit, static_argnames=("scale", "causal", "window", "softcap",
+                                   "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, scale, causal=True, window=0, softcap=0.0,
+                    block_q=128, block_k=128, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    Sq, Skv = q.shape[1], k.shape[1]
+    bq, bk = min(block_q, Sq), min(block_k, Skv)
+    q2, pq = _pad_seq(q, 1, bq)
+    k2, _ = _pad_seq(k, 1, bk)
+    v2, _ = _pad_seq(v, 1, bk)
+    # kv_len masks pad-to-block keys; padded q rows are discarded on unpad.
+    out = _fa.flash_attention(q2, k2, v2, scale=scale, causal=causal,
+                              window=window, softcap=softcap, block_q=bq,
+                              block_k=bk, kv_len=Skv, interpret=interpret)
+    return out[:, :Sq]
+
+
+@partial(jax.jit, static_argnames=("scale", "block_q", "block_k",
+                                   "interpret"))
+def mtp_attention(q, k, v, pos, depth, *, scale, block_q=128, block_k=128,
+                  interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    M = q.shape[1]
+    bq, bk = min(block_q, M), min(block_k, M)
+    mult = max(bq, bk)
+    q2, pq = _pad_seq(q, 1, mult)
+    k2, _ = _pad_seq(k, 1, mult)
+    v2, _ = _pad_seq(v, 1, mult)
+    pos2 = jnp.pad(pos, (0, pq), constant_values=-1)
+    dep2 = jnp.pad(depth, (0, pq), constant_values=-1)
+    out = _mtp.mtp_attention(q2, k2, v2, pos2, dep2, scale=scale,
+                             block_q=bq, block_k=bk, interpret=interpret)
+    return out[:, :M]
+
+
+@partial(jax.jit, static_argnames=("scale", "window", "block_k",
+                                   "interpret"))
+def decode_attention(q, k, v, k_positions, q_positions, *, scale, window=0,
+                     block_k=512, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    S = k.shape[1]
+    bk = min(block_k, S)
+    k2, pk = _pad_seq(k, 1, bk)
+    v2, _ = _pad_seq(v, 1, bk)
+    kp2 = jnp.pad(k_positions, ((0, 0), (0, pk)), constant_values=-1)
+    return _dk.decode_attention(q, k2, v2, kp2, q_positions, scale=scale,
+                                window=window, block_k=bk,
+                                interpret=interpret)

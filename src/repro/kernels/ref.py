@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masks import mtp_mask_predicate
+
+NEG_INF = -1e30
+
+
+def attention_reference(q, k, v, *, scale, causal=True, window=0,
+                        softcap=0.0):
+    """q (B,Sq,H,hd), k/v (B,Skv,KV,hd). Dense-mask softmax attention."""
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qr = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgd,bjkd->bkgqj", qr, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Skv)[None, :]
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= qp >= kp
+    if window > 0:
+        ok &= (qp - kp) < window
+    s = jnp.where(ok, s, NEG_INF)
+    denom_ok = ok.any(axis=1)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqj,bjkd->bkgqd", p, v,
+                     preferred_element_type=jnp.float32)
+    out = jnp.where(denom_ok[None, None, None, :, None], out, 0.0)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def mtp_attention_reference(q, k, v, pos, depth, *, scale):
+    """MTP-masked attention with the closed-form predicate materialized
+    densely. q/k/v (B,M,H|KV,hd); pos/depth (M,) int32 (-1 = padding)."""
+    B, M, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qr = q.reshape(B, M, KV, G, hd)
+    s = jnp.einsum("bqkgd,bjkd->bkgqj", qr, k,
+                   preferred_element_type=jnp.float32) * scale
+    ok = mtp_mask_predicate(depth, pos, depth, pos, np_mod=jnp)
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqj,bjkd->bkgqd", p, v,
+                     preferred_element_type=jnp.float32)
+    out = jnp.where(ok.any(axis=1)[None, None, None, :, None], out, 0.0)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, M, H, hd).astype(q.dtype)
+
+
+def decode_reference(q, k, v, k_positions, q_positions, *, scale, window=0):
+    """Single-block decode: q (B,T,H,hd) vs cache k/v (B,S,KV,hd) with
+    per-slot absolute positions (B,S) (-1 = empty) and query positions
+    (B,T)."""
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qr = q.reshape(B, T, KV, G, hd)
+    s = jnp.einsum("bqkgd,bjkd->bkgqj", qr, k,
+                   preferred_element_type=jnp.float32) * scale
+    ok = (k_positions[:, None, :] <= q_positions[:, :, None]) & \
+         (k_positions[:, None, :] >= 0)
+    if window > 0:
+        ok &= (q_positions[:, :, None] - k_positions[:, None, :]) < window
+    s = jnp.where(ok[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqj,bjkd->bkgqd", p, v,
+                     preferred_element_type=jnp.float32)
+    out = jnp.where(ok.any(axis=2)[:, None, None, :, None], out, 0.0)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, T, H, hd).astype(q.dtype)

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — device count is locked on first jax init, and the
+dry-run must set XLA_FLAGS before that happens (see dryrun.py).
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  2 pods x 256 chips as (pod=2, data=16, model=16); the batch
+            shards over ("pod", "data") and parameters/caches over "model".
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2, *,
+                    multi_pod: bool = False):
+    """Small host-device mesh for tests (requires
+    --xla_force_host_platform_device_count >= product)."""
+    if multi_pod:
+        return jax.make_mesh((2, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,145 @@
+"""Roofline accounting from compiled dry-run artifacts.
+
+Three terms (per chip, seconds) against TPU v5e constants:
+
+    compute    = HLO_FLOPs / (chips × 197e12)
+    memory     = HLO_bytes / (chips × 819e9)
+    collective = collective_bytes / (chips × 50e9)
+
+``cost_analysis()`` supplies FLOPs / bytes-accessed. Collective bytes are
+NOT in cost_analysis: we parse the post-SPMD optimized HLO
+(``compiled.as_text()``) and sum the output-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+The optimized module is the per-partition program, so parsed byte counts are
+already per chip.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+from repro.configs.base import HW
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-reduce.5 = f32[16,6144]{1,0} all-reduce(...)
+#       ROOT %fusion = (bf16[8,128]{...}, f32[...]) tuple-ish
+# match sync ops and the async "-start" form (the "-done" half carries the
+# same shape and would double count)
+_OP_RE = re.compile(
+    r"=\s*((?:\()?[a-z0-9]+\[[0-9,]*\][^ ]*)\s+(" + "|".join(_COLLECTIVES)
+    + r")(?:-start)?[(\s]")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, dict]:
+    """Per-collective-kind {count, bytes} from optimized HLO text."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        ty, kind = m.group(1), m.group(2)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += _shape_bytes(ty)
+    return out
+
+
+def roofline_terms(cost: dict, coll: Dict[str, dict], n_chips: int,
+                   model_flops: float = 0.0) -> dict:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    # cost_analysis on an SPMD-partitioned module reports per-partition
+    # numbers; collective bytes parsed from the per-partition program too.
+    cbytes = sum(v["bytes"] for v in coll.values())
+    t_compute = flops / HW["peak_flops"]
+    t_memory = byts / HW["hbm_bw"]
+    t_coll = cbytes / HW["ici_bw"]
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll,
+             "flops_per_chip": flops, "bytes_per_chip": byts,
+             "collective_bytes_per_chip": cbytes}
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: terms[k])
+    terms["bottleneck"] = dom
+    if model_flops:
+        total_hlo = flops * n_chips
+        terms["model_flops"] = model_flops
+        terms["useful_flops_ratio"] = model_flops / max(total_hlo, 1.0)
+    return terms
+
+
+def model_flops_estimate(tcfg, shape, dcfg=None, k_infer: int = 5) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) 'useful' FLOPs for the workload."""
+    n_params = param_count(tcfg, active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        flops = 2.0 * n_params * tokens          # frozen target fwd only
+        if dcfg is not None:
+            d_params = drafter_param_count(dcfg, tcfg)
+            from repro.core import cod
+            m = cod.expanded_length(shape.seq_len, dcfg.k_train,
+                                    dcfg.cod_rate)
+            flops += 6.0 * d_params * shape.global_batch * m
+        return flops
+    if shape.kind == "prefill":
+        return 2.0 * n_params * shape.global_batch * shape.seq_len
+    # decode: one speculative iteration = K+1 target tokens + K drafter slots
+    flops = 2.0 * n_params * shape.global_batch * (k_infer + 1)
+    if dcfg is not None:
+        flops += 2.0 * drafter_param_count(dcfg, tcfg) * \
+            shape.global_batch * k_infer
+    return flops
+
+
+def param_count(cfg, active_only: bool = False) -> float:
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab_size
+    emb = V * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.family == "ssm":
+        di = cfg.ssm.expand * d
+        per = d * (2 * di + 2 * cfg.ssm.d_state +
+                   di // cfg.ssm.head_dim) + di * d
+        return emb + L * per
+    attn = d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim \
+        + cfg.n_heads * cfg.head_dim * d
+    glu = cfg.mlp_variant in ("swiglu", "geglu")
+    mlp = d * cfg.d_ff * (3 if glu else 2)
+    total = emb
+    for li in range(L):
+        total += attn
+        if cfg.is_moe_layer(li):
+            e = (cfg.moe.top_k if active_only else cfg.moe.n_experts)
+            total += mlp * (e + cfg.moe.n_shared_experts)
+        else:
+            total += mlp
+    if cfg.family == "hybrid":
+        W = cfg.hybrid.lru_width or d
+        total += L * (2 * d * W + 2 * W * W + W * d) * 2 // 3  # rec slots
+    if cfg.n_encoder_layers:
+        total += cfg.n_encoder_layers * (attn + mlp)
+    return float(total)
+
+
+def drafter_param_count(dcfg, tcfg) -> float:
+    d = dcfg.d_model
+    per = d * (dcfg.n_heads + 2 * dcfg.n_kv_heads) * dcfg.head_dim \
+        + dcfg.n_heads * dcfg.head_dim * d + 3 * d * dcfg.d_ff
+    return float(tcfg.vocab_size * d * 2 + dcfg.num_taps * tcfg.d_model * d
+                 + 2 * d * d + dcfg.n_layers * per)

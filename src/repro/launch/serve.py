@@ -1,0 +1,71 @@
+"""Serving launcher: load a trained drafter checkpoint and serve batched
+speculative decoding, printing OTPS/acceptance stats.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
+        --ckpt results/ckpt --mode parallel --k 5
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_pytree
+from repro.configs import DrafterConfig, get_config
+from repro.core import drafter as D
+from repro.models import get_model, make_extras
+from repro.serving import Engine, EngineConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt", default="results/ckpt")
+    ap.add_argument("--mode", default="parallel",
+                    choices=["parallel", "ar", "none"])
+    ap.add_argument("--k", type=int, default=5)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=32)
+    args = ap.parse_args()
+
+    reduced = args.reduced or jax.default_backend() != "tpu"
+    tcfg = get_config(args.arch)
+    if reduced:
+        tcfg = tcfg.reduced()
+    model = get_model(tcfg)
+    key = jax.random.PRNGKey(0)
+    tparams = model.init(key)
+
+    dcfg = dparams = None
+    if args.mode != "none":
+        dcfg = DrafterConfig(n_layers=args.layers,
+                             k_infer=args.k).resolve(tcfg)
+        tmpl = D.init_params(dcfg, tcfg, key)
+        try:
+            dparams = load_pytree(tmpl, args.ckpt, f"drafter_{args.arch}")
+            print("loaded drafter checkpoint")
+        except Exception as e:
+            print(f"no checkpoint ({e}); using random drafter")
+            dparams = tmpl
+
+    eng = Engine(tcfg, dcfg, tparams, dparams,
+                 EngineConfig(K=args.k, max_new_tokens=args.max_new,
+                              drafter_mode=args.mode, max_len=256),
+                 args.batch)
+    prompts = jax.random.randint(key, (args.batch, 8), 0,
+                                 tcfg.vocab_size - 2)
+    extras = (make_extras(tcfg, args.batch, "prefill", key)
+              if tcfg.family in ("vlm", "encdec") else {})
+    r = eng.run(prompts, extras)
+    r = eng.run(prompts, extras)   # steady-state timing
+    print(f"mode={args.mode} K={args.k}: OTPS={r['otps']:.1f} "
+          f"AL={r['acceptance_length']:.2f} "
+          f"({r['new_tokens']} tokens, {r['iterations']} iterations)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.models.registry import (Model, extra_input_shapes, get_model,
+                                   make_extras)
+from repro.models.transformer import ModelOutput, tap_layers
+
+__all__ = ["Model", "ModelOutput", "extra_input_shapes", "get_model",
+           "make_extras", "tap_layers"]

@@ -1,0 +1,206 @@
+"""Whisper-style encoder-decoder backbone. [arXiv:2212.04356]
+
+The mel-spectrogram + conv feature extractor is a STUB per the assignment:
+callers provide precomputed frame embeddings (B, encoder_seq, d_model) — see
+``registry.input_specs``. We implement the transformer: a bidirectional
+encoder over frames and a causal decoder with cross-attention. Positions are
+absolute sinusoidal (Whisper), added at the embedding level.
+
+EAGLE taps come from *decoder* layers; encoder information reaches the
+drafter through them (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.transformer import ModelOutput, tap_layers
+from repro.sharding.utils import shard_hint
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+def _enc_layer_init(cfg: ModelConfig, key: Array, dtype) -> dict:
+    ka, km = jax.random.split(key)
+    return {"ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": T.attn_init(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.head_dim, False, dtype),
+            "mlp": L.mlp_init(km, cfg.d_model, cfg.d_ff, cfg.mlp_variant, dtype)}
+
+
+def encode(cfg: ModelConfig, params: dict, frames: Array) -> Array:
+    """frames (B, Senc, D) stub embeddings -> encoder output (B, Senc, D)."""
+    B, S, D = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = frames + L.sinusoidal_positions(pos, D).astype(frames.dtype)
+
+    def body(x, p):
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, _ = T.attn_apply(p["attn"], h, cfg=cfg, kind="full",
+                            positions=pos, cache=None, mode="train")
+        x = x + a
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + L.mlp_apply(p["mlp"], h, cfg.mlp_variant)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# decoder
+# ---------------------------------------------------------------------------
+
+def _dec_layer_init(cfg: ModelConfig, key: Array, dtype) -> dict:
+    ka, kx, km = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "lnx": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "self_attn": T.attn_init(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.head_dim, False, dtype),
+        "cross_attn": T.attn_init(kx, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.head_dim, False, dtype),
+        "mlp": L.mlp_init(km, cfg.d_model, cfg.d_ff, cfg.mlp_variant, dtype),
+    }
+
+
+def _cross_apply(cfg: ModelConfig, p: dict, x: Array, enc_kv: dict) -> Array:
+    """Cross-attention against precomputed encoder K/V (no mask)."""
+    B, Tq, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, Tq, H, hd)
+    out = L.full_attention(q, enc_kv["k"].astype(q.dtype),
+                           enc_kv["v"].astype(q.dtype), scale=cfg.q_scale())
+    return out.reshape(B, Tq, H * hd) @ p["wo"]
+
+
+def _enc_kv(cfg: ModelConfig, p: dict, enc_out: Array) -> dict:
+    B, S, D = enc_out.shape
+    return {"k": (enc_out @ p["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim),
+            "v": (enc_out @ p["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)}
+
+
+def _dec_slot_apply(cfg, p, x, *, positions, cache, mode, enc_kv):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    new_self = None
+    a, new_self = T.attn_apply(p["self_attn"], h, cfg=cfg, kind="global",
+                               positions=positions,
+                               cache=None if cache is None else cache["self"],
+                               mode=mode)
+    x = x + a
+    h = L.rms_norm(x, p["lnx"], cfg.norm_eps)
+    x = x + _cross_apply(cfg, p["cross_attn"], h, enc_kv)
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + L.mlp_apply(p["mlp"], h, cfg.mlp_variant)
+    new_cache = None if cache is None else {"self": new_self,
+                                            "cross": cache["cross"]}
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# model API
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: Array) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    k0, k1, k2 = jax.random.split(key, 3)
+    enc = jax.vmap(lambda k: _enc_layer_init(cfg, k, dtype))(
+        jax.random.split(k0, cfg.n_encoder_layers))
+    dec = jax.vmap(lambda k: _dec_layer_init(cfg, k, dtype))(
+        jax.random.split(k1, cfg.n_layers))
+    return {
+        "embed": L.embed_init(k2, cfg.vocab_size, cfg.d_model, dtype),
+        "enc_blocks": enc,
+        "enc_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "dec_blocks": dec,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Self-attn cache per decoder layer + cross K/V (filled at prefill)."""
+    self_c = L.make_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.head_dim,
+                             dtype=dtype, ring=False)
+    cross = {"k": jnp.zeros((batch, cfg.encoder_seq, cfg.n_kv_heads,
+                             cfg.head_dim), dtype),
+             "v": jnp.zeros((batch, cfg.encoder_seq, cfg.n_kv_heads,
+                             cfg.head_dim), dtype)}
+    per = {"self": self_c, "cross": cross}
+    return {"blocks": jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(), per)}
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: Array, *,
+            positions: Optional[Array] = None,
+            cache: Optional[dict] = None,
+            mode: str = "train",
+            encoder_embeds: Optional[Array] = None,
+            vision_embeds: Optional[Array] = None,
+            collect_taps: bool = True,
+            head_last_only: bool = False) -> ModelOutput:
+    """Train/prefill require encoder_embeds (stub frontend output); prefill
+    fills both the self cache and the per-layer cross K/V. Decode reads the
+    cross K/V from the cache."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = x + L.sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+
+    enc_out = None
+    if encoder_embeds is not None:
+        enc_out = encode(cfg, params, encoder_embeds)
+        enc_out = shard_hint(enc_out, ("pod", "data"), None, None)
+
+    taps_idx = tap_layers(cfg.n_layers)
+    taps0 = jnp.zeros((len(taps_idx), B, S, cfg.d_model), x.dtype)
+
+    def scan_body(carry, xs):
+        x, taps, li = carry
+        bp, bc = xs
+        if enc_out is not None:
+            ekv = _enc_kv(cfg, bp["cross_attn"], enc_out)
+            if bc is not None:
+                bc = {"self": bc["self"], "cross": jax.tree.map(
+                    lambda dst, src: src.astype(dst.dtype), bc["cross"], ekv)}
+        else:
+            ekv = jax.tree.map(lambda a: a, bc["cross"])
+        x, nc = _dec_slot_apply(cfg, bp, x, positions=positions, cache=bc,
+                                mode=mode, enc_kv=ekv)
+        if collect_taps:
+            sel = jnp.stack([jnp.asarray(li == t) for t in taps_idx])
+            taps = jnp.where(sel[:, None, None, None], x[None], taps)
+        return (x, taps, li + 1), nc
+
+    if cache is None:
+        (x, taps, _), _ = jax.lax.scan(
+            lambda c, bp: (scan_body(c, (bp, None))[0], None),
+            (x, taps0, jnp.zeros((), jnp.int32)), params["dec_blocks"])
+        new_cache = None
+    else:
+        (x, taps, _), nb = jax.lax.scan(
+            scan_body, (x, taps0, jnp.zeros((), jnp.int32)),
+            (params["dec_blocks"], cache["blocks"]))
+        new_cache = {"blocks": nb}
+
+    if head_last_only:
+        # prefill only consumes the last position's logits; computing the
+        # full (B, S, vocab) tensor wastes memory+collectives (§Perf iter 2)
+        x = x[:, -1:]
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["embed"].T.astype(x.dtype)).astype(jnp.float32)
+    taps_out = jnp.moveaxis(taps, 0, -2).reshape(B, S, -1) if collect_taps else None
+    return ModelOutput(logits=logits, taps=taps_out, cache=new_cache,
+                       aux={"lb_loss": jnp.zeros(()), "z_loss": jnp.zeros(())})

@@ -1,0 +1,300 @@
+"""RecurrentGemma (Griffin): RG-LRU recurrent blocks + local attention, 1:2.
+[arXiv:2402.19427]
+
+Layer pattern (recurrent, recurrent, attention) scanned as super-blocks of 3;
+26 layers = 8 scanned blocks + a (recurrent, recurrent) tail. Train/prefill
+run the RG-LRU with ``jax.lax.associative_scan`` (log-depth parallel scan —
+the TPU-native mapping of the paper's linear recurrence); decode carries an
+O(1) hidden state. Local attention uses a 2048-slot ring cache, so long_500k
+decode memory is bounded (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.transformer import ModelOutput, tap_layers
+from repro.sharding.utils import shard_hint
+
+Array = jax.Array
+_LRU_C = 8.0
+
+
+def _lru_width(cfg: ModelConfig) -> int:
+    return cfg.hybrid.lru_width or cfg.d_model
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent mixer
+# ---------------------------------------------------------------------------
+
+def _rec_init(cfg: ModelConfig, key: Array, dtype) -> dict:
+    W = _lru_width(cfg)
+    cw = cfg.hybrid.conv_width
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a = sigmoid(Lambda)^c lies in (0.9, 0.999)
+    u = jax.random.uniform(ks[4], (W,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1.0 / _LRU_C) / (1 - u ** (1.0 / _LRU_C)))
+    return {
+        "in_x": L.dense_init(ks[0], (cfg.d_model, W), dtype=dtype),
+        "in_gate": L.dense_init(ks[1], (cfg.d_model, W), dtype=dtype),
+        "conv_w": L.dense_init(ks[2], (cw, W), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((W,), dtype),
+        "w_rec_gate": L.dense_init(ks[3], (W, W), scale=0.02, dtype=dtype),
+        "w_in_gate": L.dense_init(ks[5], (W, W), scale=0.02, dtype=dtype),
+        "lam": lam,
+        "out": L.dense_init(ks[6], (W, cfg.d_model), dtype=dtype),
+    }
+
+
+def _rg_lru(xb: Array, p: dict, h0: Optional[Array], mode: str):
+    """xb (B, S, W) post-conv branch. Returns (h (B,S,W), h_last (B,W))."""
+    r = jax.nn.sigmoid((xb @ p["w_rec_gate"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xb @ p["w_in_gate"]).astype(jnp.float32))
+    log_a = _LRU_C * r * jax.nn.log_sigmoid(p["lam"])        # (B,S,W) <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12)) * (
+        i * xb.astype(jnp.float32))
+
+    if mode == "decode":
+        def body(h, inp):
+            at, bt = inp
+            h = at * h + bt
+            return h, h
+        h_last, hs = jax.lax.scan(
+            body,
+            h0.astype(jnp.float32) if h0 is not None
+            else jnp.zeros(gated.shape[::2], jnp.float32),
+            (a.swapaxes(0, 1), gated.swapaxes(0, 1)))
+        return hs.swapaxes(0, 1).astype(xb.dtype), h_last
+
+    if h0 is not None:  # fold the carried state into the first step
+        gated = gated.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return hs.astype(xb.dtype), hs[:, -1]
+
+
+def _rec_apply(cfg: ModelConfig, p: dict, x: Array, *,
+               cache: Optional[dict], mode: str):
+    xb = jax.nn.gelu(x @ p["in_gate"], approximate=True)      # gate branch
+    xr = x @ p["in_x"]
+    conv_state = cache["conv"] if cache is not None else None
+    xr, new_conv, conv_full = _conv(xr, p["conv_w"], p["conv_b"], conv_state)
+    xr = shard_hint(xr, ("pod", "data"), None, "model")
+    h, h_last = _rg_lru(xr, p, cache["h"] if cache is not None else None, mode)
+    out = (h * xb) @ p["out"]
+    new_cache, snaps = None, None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "h": h_last.astype(cache["h"].dtype)}
+        if mode == "decode":
+            # per-token snapshots for speculative rollback
+            cw = p["conv_w"].shape[0]
+            T = xr.shape[1]
+            conv_snaps = jnp.stack(
+                [conv_full[:, t + 1:t + cw] for t in range(T)], axis=1)
+            snaps = {"conv": conv_snaps.astype(new_cache["conv"].dtype),
+                     "h": h.astype(jnp.float32)}   # h (B,T,W) per-step states
+    return out, new_cache, snaps
+
+
+def _conv(xr: Array, w: Array, b: Array, conv_state: Optional[Array]):
+    cw = w.shape[0]
+    hist = conv_state if conv_state is not None else jnp.zeros(
+        (xr.shape[0], cw - 1, xr.shape[-1]), xr.dtype)
+    full = jnp.concatenate([hist.astype(xr.dtype), xr], axis=1)
+    out = sum(full[:, i:i + xr.shape[1]] * w[i] for i in range(cw)) + b
+    return out, full[:, -(cw - 1):], full
+
+
+# ---------------------------------------------------------------------------
+# block: (pre-norm mixer residual) + (pre-norm MLP residual)
+# ---------------------------------------------------------------------------
+
+def _slot_init(cfg: ModelConfig, key: Array, slot_kind: str, dtype) -> dict:
+    ka, km = jax.random.split(key)
+    p = {"ln1": jnp.ones((cfg.d_model,), jnp.float32),
+         "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+         "mlp": L.mlp_init(km, cfg.d_model, cfg.d_ff, cfg.mlp_variant, dtype)}
+    if slot_kind == "recurrent":
+        p["rec"] = _rec_init(cfg, ka, dtype)
+    else:
+        p["attn"] = T.attn_init(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.head_dim, cfg.qkv_bias, dtype)
+    return p
+
+
+def _slot_apply(cfg: ModelConfig, p: dict, x: Array, *, slot_kind: str,
+                positions: Array, cache: Optional[dict], mode: str):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    snaps = None
+    if slot_kind == "recurrent":
+        mix, new_cache, snaps = _rec_apply(cfg, p["rec"], h, cache=cache,
+                                           mode=mode)
+    else:
+        mix, new_cache = T.attn_apply(p["attn"], h, cfg=cfg, kind="local",
+                                      positions=positions, cache=cache,
+                                      mode=mode)
+    x = x + mix
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + L.mlp_apply(p["mlp"], h, cfg.mlp_variant)
+    return x, new_cache, snaps
+
+
+def _pattern(cfg: ModelConfig):
+    return cfg.hybrid.block_pattern
+
+
+def init_params(cfg: ModelConfig, key: Array) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    pat = _pattern(cfg)
+    period = len(pat)
+    n_sb, tail = divmod(cfg.n_layers, period)
+    k0, k1, k2 = jax.random.split(key, 3)
+
+    def block_init(bkey):
+        sk = jax.random.split(bkey, period)
+        return {f"slot{i}": _slot_init(cfg, sk[i], pat[i], dtype)
+                for i in range(period)}
+
+    blocks = jax.vmap(block_init)(jax.random.split(k0, n_sb))
+    params = {
+        "embed": L.embed_init(k1, cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if tail:
+        tk = jax.random.split(k2, tail)
+        params["tail"] = {f"slot{i}": _slot_init(cfg, tk[i], pat[i], dtype)
+                          for i in range(tail)}
+    return params
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    pat = _pattern(cfg)
+    period = len(pat)
+    n_sb, tail = divmod(cfg.n_layers, period)
+    W = _lru_width(cfg)
+    cw = cfg.hybrid.conv_width
+
+    def slot_cache(kind, stack: Optional[int]):
+        if kind == "recurrent":
+            c = {"conv": jnp.zeros((batch, cw - 1, W), dtype),
+                 "h": jnp.zeros((batch, W), jnp.float32)}
+        else:
+            ring = cfg.window_size < max_len
+            ln = min(cfg.window_size, max_len)
+            c = L.make_kv_cache(batch, ln, cfg.n_kv_heads, cfg.head_dim,
+                                dtype=dtype, ring=ring)
+        if stack is not None:
+            c = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (stack,) + a.shape).copy(), c)
+        return c
+
+    cache = {"blocks": {f"slot{i}": slot_cache(pat[i], n_sb)
+                        for i in range(period)}}
+    if tail:
+        cache["tail"] = {f"slot{i}": slot_cache(pat[i], None)
+                         for i in range(tail)}
+    return cache
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: Array, *,
+            positions: Optional[Array] = None,
+            cache: Optional[dict] = None,
+            mode: str = "train",
+            vision_embeds: Optional[Array] = None,
+            collect_taps: bool = True,
+            head_last_only: bool = False) -> ModelOutput:
+    B, S = tokens.shape
+    pat = _pattern(cfg)
+    period = len(pat)
+    n_sb = cfg.n_layers // period
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    taps_idx = tap_layers(cfg.n_layers)
+    taps0 = jnp.zeros((len(taps_idx), B, S, cfg.d_model), x.dtype)
+
+    def run_block(x, taps, bparams, bcache, base):
+        new_cache = {} if bcache is not None else None
+        snaps = {} if bcache is not None else None
+        for i in range(period):
+            sl = f"slot{i}"
+            x, sc, sn = _slot_apply(cfg, bparams[sl], x, slot_kind=pat[i],
+                                    positions=positions,
+                                    cache=None if bcache is None else bcache[sl],
+                                    mode=mode)
+            if new_cache is not None:
+                new_cache[sl] = sc
+                snaps[sl] = sn
+            if collect_taps:
+                li = base + i
+                sel = jnp.stack([jnp.asarray(li == t) for t in taps_idx])
+                taps = jnp.where(sel[:, None, None, None], x[None], taps)
+        return x, taps, new_cache, snaps
+
+    def scan_body(carry, xs):
+        x, taps, base = carry
+        bp, bc = xs
+        x, taps, nc, sn = run_block(x, taps, bp, bc, base)
+        return (x, taps, base + period), (nc, sn)
+
+    snapshots = None
+    if cache is None:
+        (x, taps, base), _ = jax.lax.scan(
+            lambda c, bp: (scan_body(c, (bp, None))[0], None),
+            (x, taps0, jnp.zeros((), jnp.int32)), params["blocks"])
+        new_cache = None
+    else:
+        (x, taps, base), (nb, snapshots) = jax.lax.scan(
+            scan_body, (x, taps0, jnp.zeros((), jnp.int32)),
+            (params["blocks"], cache["blocks"]))
+        new_cache = {"blocks": nb}
+        snapshots = {"blocks": snapshots}
+
+    if "tail" in params:
+        tcache = cache.get("tail") if cache is not None else None
+        ntail, stail = {}, {}
+        for i in range(len(params["tail"])):
+            sl = f"slot{i}"
+            li = n_sb * period + i
+            x, sc, sn = _slot_apply(cfg, params["tail"][sl], x,
+                                    slot_kind=pat[i], positions=positions,
+                                    cache=None if tcache is None else tcache[sl],
+                                    mode=mode)
+            ntail[sl] = sc
+            stail[sl] = sn
+            if collect_taps:
+                sel = jnp.stack([jnp.asarray(li == t) for t in taps_idx])
+                taps = jnp.where(sel[:, None, None, None], x[None], taps)
+        if new_cache is not None:
+            new_cache["tail"] = ntail
+            if snapshots is not None:
+                snapshots["tail"] = stail
+
+    if head_last_only:
+        # prefill only consumes the last position's logits; computing the
+        # full (B, S, vocab) tensor wastes memory+collectives (§Perf iter 2)
+        x = x[:, -1:]
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["embed"].T.astype(x.dtype)).astype(jnp.float32)
+    taps_out = jnp.moveaxis(taps, 0, -2).reshape(B, S, -1) if collect_taps else None
+    return ModelOutput(logits=logits, taps=taps_out, cache=new_cache,
+                       aux={"lb_loss": jnp.zeros(()), "z_loss": jnp.zeros(()),
+                            "snapshots": snapshots if mode == "decode" else None})

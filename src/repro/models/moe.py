@@ -1,0 +1,106 @@
+"""Mixture-of-Experts FFN (DBRX: 16e top-4 every layer; Llama-4: 128e top-1
+interleaved + shared expert).
+
+Sort-based capacity dispatch (GShard-style drops, Switch-style capacity
+factor) expressed so XLA SPMD shards experts over the ``model`` mesh axis —
+the (E, C, D) grouped activations carry an expert-parallel sharding hint, so
+the gather/scatter between token-sharded and expert-sharded layouts lowers to
+all-to-all style collectives on the mesh.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding.utils import shard_hint
+
+Array = jax.Array
+
+
+def moe_init(key: Array, d: int, f: int, n_experts: int, n_shared: int,
+             variant: str, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": L.dense_init(ks[0], (d, n_experts), scale=0.02, dtype=jnp.float32),
+        "w_gate": L.dense_init(ks[1], (n_experts, d, f), dtype=dtype),
+        "w_up": L.dense_init(ks[2], (n_experts, d, f), dtype=dtype),
+        "w_down": L.dense_init(ks[3], (n_experts, f, d), dtype=dtype),
+    }
+    if n_shared:
+        p["shared"] = L.mlp_init(ks[4], d, f * n_shared, variant, dtype)
+    return p
+
+
+def _expert_ffn(xg: Array, p: dict, variant: str) -> Array:
+    """xg (E, C, D) -> (E, C, D), expert-parallel einsums."""
+    if variant in ("swiglu", "geglu"):
+        act = jax.nn.silu if variant == "swiglu" else (
+            lambda a: jax.nn.gelu(a, approximate=True))
+        g = jnp.einsum("ecd,edf->ecf", xg, p["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", xg, p["w_up"])
+        h = act(g) * u
+    elif variant == "relu2":
+        h = jnp.square(jax.nn.relu(jnp.einsum("ecd,edf->ecf", xg, p["w_up"])))
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xg, p["w_up"]),
+                        approximate=True)
+    h = shard_hint(h, "data", None, "model")   # (E, C, F): 2D expert shard
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+def moe_apply(p: dict, x: Array, *, n_experts: int, top_k: int,
+              capacity_factor: float, variant: str,
+              n_shared: int = 0) -> Tuple[Array, dict]:
+    """x (B, S, D) -> (out (B, S, D), aux dict with load-balance metrics)."""
+    B, S, D = x.shape
+    T = B * S
+    E, K = n_experts, top_k
+    xf = x.reshape(T, D)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)            # (T, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- capacity-based sort dispatch ------------------------------------
+    C = int((T * K) / E * capacity_factor) + 1
+    flat_e = expert_idx.reshape(-1)                            # (T*K,)
+    flat_t = jnp.arange(T * K) // K                            # token of slot
+    flat_g = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    counts = jnp.zeros(E, jnp.int32).at[flat_e].add(1)
+    offsets = jnp.cumsum(counts) - counts                      # exclusive
+    pos_in_e = jnp.arange(T * K) - offsets[se]
+    valid = pos_in_e < C
+    dest = jnp.where(valid, se * C + pos_in_e, E * C)          # E*C = trash
+
+    table = jnp.full(E * C + 1, T, jnp.int32).at[dest].set(st)[:E * C]
+    gtab = jnp.zeros(E * C + 1, jnp.float32).at[dest].set(sg)[:E * C]
+
+    x_pad = jnp.concatenate([xf, jnp.zeros((1, D), xf.dtype)], axis=0)
+    xg = x_pad[table].reshape(E, C, D)
+    xg = shard_hint(xg, "data", None, None)    # experts over data (2D shard)
+    yg = _expert_ffn(xg, p, variant)
+    yg = shard_hint(yg, "data", None, None)
+
+    y = jnp.zeros((T + 1, D), jnp.float32).at[table].add(
+        gtab[:, None] * yg.reshape(E * C, D).astype(jnp.float32))[:T]
+    out = y.astype(x.dtype)
+
+    if n_shared:
+        out = out + L.mlp_apply(p["shared"], xf, variant)
+    out = out.reshape(B, S, D)
+
+    # --- aux losses / metrics (Switch/GShard load balance + z-loss) ------
+    frac_tokens = counts.astype(jnp.float32) / jnp.maximum(T * K, 1)
+    mean_prob = probs.mean(axis=0)
+    aux = {
+        "lb_loss": E * jnp.sum(frac_tokens * mean_prob),
+        "z_loss": jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1))),
+        "drop_frac": 1.0 - valid.mean(),
+    }
+    return out, aux

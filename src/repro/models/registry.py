@@ -1,0 +1,89 @@
+"""Family dispatch: one `Model` facade over the zoo modules.
+
+`Model.forward` has a single signature across all six families; modality
+frontends (audio frames, vision patches) enter via keyword extras whose
+shapes come from `extra_input_shapes` (stub frontends per the assignment).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, ssm, transformer
+
+Array = jax.Array
+
+_FAMILY_MODULE = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": ssm,
+    "hybrid": hybrid,
+    "encdec": encdec,
+}
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    @property
+    def module(self):
+        return _FAMILY_MODULE[self.cfg.family]
+
+    def init(self, key: Array) -> dict:
+        return self.module.init_params(self.cfg, key)
+
+    def make_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+        return self.module.make_cache(self.cfg, batch, max_len, dtype=dtype)
+
+    def forward(self, params: dict, tokens: Array, *, positions=None,
+                cache=None, mode: str = "train", collect_taps: bool = True,
+                head_last_only: bool = False,
+                **extras) -> transformer.ModelOutput:
+        kw: Dict[str, Any] = dict(positions=positions, cache=cache, mode=mode,
+                                  collect_taps=collect_taps,
+                                  head_last_only=head_last_only)
+        if self.cfg.family == "encdec":
+            kw["encoder_embeds"] = extras.get("encoder_embeds")
+        else:
+            kw["vision_embeds"] = extras.get("vision_embeds")
+        return self.module.forward(self.cfg, params, tokens, **kw)
+
+    def text_len(self, total_seq: int, mode: str) -> int:
+        """How many *token* inputs produce a length-`total_seq` sequence
+        (VLM prepends vision_tokens at train/prefill)."""
+        if self.cfg.family == "vlm" and mode in ("train", "prefill"):
+            return max(total_seq - self.cfg.vision_tokens, 1)
+        return total_seq
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    if cfg.family not in _FAMILY_MODULE:
+        raise KeyError(f"unknown family {cfg.family!r}")
+    return Model(cfg)
+
+
+def extra_input_shapes(cfg: ModelConfig, batch: int,
+                       mode: str) -> Dict[str, Tuple[tuple, Any]]:
+    """Stub-frontend inputs: name -> (shape, dtype). Empty for pure-text."""
+    dt = jnp.dtype(cfg.dtype)
+    out: Dict[str, Tuple[tuple, Any]] = {}
+    if cfg.family == "encdec":
+        out["encoder_embeds"] = ((batch, cfg.encoder_seq, cfg.d_model), dt)
+    elif cfg.family == "vlm" and mode in ("train", "prefill"):
+        out["vision_embeds"] = ((batch, cfg.vision_tokens, cfg.vision_dim), dt)
+    return out
+
+
+def make_extras(cfg: ModelConfig, batch: int, mode: str, key: Array) -> dict:
+    """Concrete random stub-frontend inputs (smoke tests, examples)."""
+    out = {}
+    for name, (shape, dt) in extra_input_shapes(cfg, batch, mode).items():
+        key, sub = jax.random.split(key)
+        out[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32).astype(dt)
+    return out

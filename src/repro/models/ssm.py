@@ -1,0 +1,264 @@
+"""Mamba-2 (SSD — state-space duality) target model. [arXiv:2405.21060]
+
+Attention-free: each block is an SSD mixer (in_proj → depthwise conv over
+(x, B, C) → chunked selective-state-space scan → gated RMSNorm → out_proj).
+
+Train/prefill use the *chunked* SSD algorithm: quadratic attention-like
+computation within chunks of ``chunk_size`` plus a sequential ``lax.scan``
+over chunk states — O(S·Q) memory instead of O(S²). Decode carries an O(1)
+recurrent state, which is why ``long_500k`` is native for this family.
+
+The EAGLE tap mechanism is unchanged: taps are block outputs (the drafter is
+attention-based regardless of the target family — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.transformer import ModelOutput, tap_layers
+from repro.sharding.utils import shard_hint
+
+Array = jax.Array
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    H = d_inner // cfg.ssm.head_dim
+    return d_inner, H, cfg.ssm.head_dim, cfg.ssm.d_state
+
+
+# ---------------------------------------------------------------------------
+# per-layer params
+# ---------------------------------------------------------------------------
+
+def _mixer_init(cfg: ModelConfig, key: Array, dtype) -> dict:
+    d_inner, H, P, N = _dims(cfg)
+    cw = cfg.ssm.conv_width
+    conv_ch = d_inner + 2 * N
+    ks = jax.random.split(key, 5)
+    dt = jnp.exp(jax.random.uniform(ks[3], (H,), jnp.float32,
+                                    math.log(1e-3), math.log(1e-1)))
+    return {
+        "ln": jnp.ones((cfg.d_model,), jnp.float32),
+        "in_proj": L.dense_init(ks[0], (cfg.d_model, 2 * d_inner + 2 * N + H),
+                                dtype=dtype),
+        "conv_w": L.dense_init(ks[1], (cw, conv_ch), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jax.random.uniform(ks[2], (H,), jnp.float32, 1.0, 16.0)),
+        "dt_bias": dt + jnp.log(-jnp.expm1(-dt)),   # softplus^-1(dt)
+        "D": jnp.ones((H,), jnp.float32),
+        "gnorm": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": L.dense_init(ks[4], (d_inner, cfg.d_model), dtype=dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_inner, H, P, N = _dims(cfg)
+    z, xBC, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: Array, w: Array, b: Array,
+                 conv_state: Optional[Array]):
+    """Depthwise causal conv, width cw. conv_state (B, cw-1, C) holds the
+    previous raw inputs for streaming decode. Returns (out, new_state)."""
+    cw = w.shape[0]
+    hist = conv_state if conv_state is not None else jnp.zeros(
+        (xBC.shape[0], cw - 1, xBC.shape[-1]), xBC.dtype)
+    full = jnp.concatenate([hist.astype(xBC.dtype), xBC], axis=1)
+    out = sum(full[:, i:i + xBC.shape[1]] * w[i] for i in range(cw)) + b
+    new_state = full[:, -(cw - 1):]
+    return jax.nn.silu(out), new_state, full
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, D, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x (B,S,H,P), dt (B,S,H) [post-softplus], A (H,) negative, Bm/Cm (B,S,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    xq = x.reshape(Bsz, nc, chunk, H, P)
+    dq = dt.reshape(Bsz, nc, chunk, H)
+    Bq = Bm.reshape(Bsz, nc, chunk, N)
+    Cq = Cm.reshape(Bsz, nc, chunk, N)
+    a = dq * A  # (B,nc,Q,H) negative log-decay increments
+    csum = jnp.cumsum(a, axis=2)
+
+    # intra-chunk (quadratic within chunk)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cq, Bq,
+                    preferred_element_type=jnp.float32)
+    decay = jnp.exp(csum[:, :, :, None, :] - csum[:, :, None, :, :])  # (B,nc,Q,Q,H)
+    idx = jnp.arange(chunk)
+    causal = (idx[:, None] >= idx[None, :])[None, None, :, :, None]
+    w = jnp.where(causal, cb[..., None] * decay, 0.0)
+    y = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", w, dq, xq,
+                   preferred_element_type=jnp.float32)
+
+    # chunk states: contribution of each chunk to the running state
+    last = csum[:, :, -1:, :]
+    st = jnp.einsum("bcjh,bcjn,bcjhp->bchpn",
+                    jnp.exp(last - csum) * dq, Bq, xq,
+                    preferred_element_type=jnp.float32)
+
+    def body(state, inp):
+        st_c, decay_c = inp        # (B,H,P,N), (B,H)
+        new = state * decay_c[:, :, None, None] + st_c
+        return new, state          # emit state *before* this chunk
+
+    s0 = (init_state.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((Bsz, H, P, N), jnp.float32))
+    chunk_decay = jnp.exp(last[:, :, 0]).transpose(1, 0, 2)      # (nc,B,H)
+    final, prev_states = jax.lax.scan(
+        body, s0, (st.transpose(1, 0, 2, 3, 4), chunk_decay))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)           # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp", Cq, prev_states,
+                         jnp.exp(csum), preferred_element_type=jnp.float32)
+    out = (y + y_inter).reshape(Bsz, S, H, P) + D[None, None, :, None] * x
+    return out.astype(x.dtype), final
+
+
+def _ssd_step(x, dt, A, Bm, Cm, D, state):
+    """Sequential decode over T tokens. Emits a per-token state snapshot so
+    speculative decoding can roll back to the last *accepted* token
+    (serving/cache_ops.commit). Shapes as above with S=T small."""
+    def body(s, inp):
+        xt, dtt, bt, ct = inp      # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * A)   # (B,H)
+        s = s * decay[:, :, None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dtt, bt, xt, preferred_element_type=jnp.float32)
+        yt = jnp.einsum("bn,bhpn->bhp", ct, s,
+                        preferred_element_type=jnp.float32)
+        return s, (yt, s)
+
+    xs = (x.swapaxes(0, 1), dt.swapaxes(0, 1),
+          Bm.swapaxes(0, 1), Cm.swapaxes(0, 1))
+    state, (ys, snaps) = jax.lax.scan(body, state.astype(jnp.float32), xs)
+    y = ys.swapaxes(0, 1) + D[None, None, :, None] * x
+    return y.astype(x.dtype), state, snaps.swapaxes(0, 1)   # snaps (B,T,H,P,N)
+
+
+def _mixer_apply(cfg: ModelConfig, p: dict, x: Array, *,
+                 cache: Optional[dict], mode: str):
+    d_inner, H, P, N = _dims(cfg)
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    z, xBC, dt_raw = _split_proj(cfg, h @ p["in_proj"])
+    xBC, conv_state, conv_full = _causal_conv(
+        xBC, p["conv_w"], p["conv_b"],
+        cache["conv"] if cache is not None else None)
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    Bsz, S = xs.shape[:2]
+    xh = xs.reshape(Bsz, S, H, P)
+    xh = shard_hint(xh, ("pod", "data"), None, "model")
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    snaps = None
+    if mode == "decode":
+        y, state, st_snaps = _ssd_step(xh, dt, A, Bm.astype(jnp.float32),
+                                       Cm.astype(jnp.float32), p["D"],
+                                       cache["state"])
+        # conv-state snapshot after token t = raw-input window ending at t
+        cw = p["conv_w"].shape[0]
+        conv_snaps = jnp.stack(
+            [conv_full[:, t + 1:t + cw] for t in range(S)], axis=1)
+        snaps = {"state": st_snaps, "conv": conv_snaps}
+    else:
+        chunk = min(cfg.ssm.chunk_size, S)
+        while S % chunk:
+            chunk -= 1
+        y, state = _ssd_chunked(xh, dt, A, Bm.astype(jnp.float32),
+                                Cm.astype(jnp.float32), p["D"], chunk)
+
+    y = y.reshape(Bsz, S, d_inner)
+    y = L.rms_norm(y * jax.nn.silu(z), p["gnorm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": conv_state.astype(cache["conv"].dtype),
+                     "state": state.astype(cache["state"].dtype)}
+    return x + out, new_cache, snaps
+
+
+# ---------------------------------------------------------------------------
+# model API (mirrors transformer.py)
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: Array) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    k0, k1 = jax.random.split(key)
+    bkeys = jax.random.split(k0, cfg.n_layers)
+    blocks = jax.vmap(lambda k: _mixer_init(cfg, k, dtype))(bkeys)
+    return {
+        "embed": L.embed_init(k1, cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    d_inner, H, P, N = _dims(cfg)
+    cw = cfg.ssm.conv_width
+    per = {
+        "conv": jnp.zeros((batch, cw - 1, d_inner + 2 * N), dtype),
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+    return {"blocks": jax.tree.map(
+        lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), per)}
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: Array, *,
+            positions: Optional[Array] = None,
+            cache: Optional[dict] = None,
+            mode: str = "train",
+            vision_embeds: Optional[Array] = None,
+            collect_taps: bool = True,
+            head_last_only: bool = False) -> ModelOutput:
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    taps_idx = tap_layers(cfg.n_layers)
+    taps0 = jnp.zeros((len(taps_idx), B, S, cfg.d_model), x.dtype)
+
+    def scan_body(carry, xs):
+        x, taps, li = carry
+        bparams, bcache = xs
+        x, ncache, snaps = _mixer_apply(cfg, bparams, x, cache=bcache,
+                                        mode=mode)
+        if collect_taps:
+            sel = jnp.stack([jnp.asarray(li == t) for t in taps_idx])
+            taps = jnp.where(sel[:, None, None, None], x[None], taps)
+        return (x, taps, li + 1), (ncache, snaps)
+
+    snapshots = None
+    if cache is None:
+        (x, taps, _), _ = jax.lax.scan(
+            lambda c, bp: (scan_body(c, (bp, None))[0], None),
+            (x, taps0, jnp.zeros((), jnp.int32)), params["blocks"])
+        new_cache = None
+    else:
+        (x, taps, _), (nblocks, snapshots) = jax.lax.scan(
+            scan_body, (x, taps0, jnp.zeros((), jnp.int32)),
+            (params["blocks"], cache["blocks"]))
+        new_cache = {"blocks": nblocks}
+
+    if head_last_only:
+        # prefill only consumes the last position's logits; computing the
+        # full (B, S, vocab) tensor wastes memory+collectives (§Perf iter 2)
+        x = x[:, -1:]
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["embed"].T.astype(x.dtype)).astype(jnp.float32)
+    taps_out = jnp.moveaxis(taps, 0, -2).reshape(B, S, -1) if collect_taps else None
+    return ModelOutput(logits=logits, taps=taps_out, cache=new_cache,
+                       aux={"lb_loss": jnp.zeros(()), "z_loss": jnp.zeros(()),
+                            "snapshots": ({"blocks": snapshots}
+                                          if snapshots is not None else None)})

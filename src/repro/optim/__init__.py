@@ -1,0 +1,7 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               apply_updates, clip_by_global_norm,
+                               linear_warmup_schedule)
+from repro.optim.accumulate import GradAccumulator
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "apply_updates",
+           "clip_by_global_norm", "linear_warmup_schedule", "GradAccumulator"]

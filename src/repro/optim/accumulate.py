@@ -1,0 +1,35 @@
+"""Gradient accumulation — across micro-batches *and within a sequence*
+(the paper's §3.2 novelty: a single COD-expanded sequence is split into
+segments, each a separate forward/backward, summed here before one optimizer
+step). The accumulator is jit-friendly: state is a grads pytree + counters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+class GradAccumulator:
+    def __init__(self, params_like):
+        self._zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params_like)
+
+    def init(self):
+        return {"grads": self._zeros, "weight": jnp.zeros((), jnp.float32)}
+
+    @staticmethod
+    def add(acc, grads, weight):
+        """Accumulate `weight`-weighted gradient sums (weight = number of
+        valid target tokens in the segment, so the final average is exact
+        regardless of segment sizes)."""
+        w = jnp.asarray(weight, jnp.float32)
+        return {
+            "grads": jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) * w, acc["grads"], grads),
+            "weight": acc["weight"] + w,
+        }
+
+    @staticmethod
+    def mean(acc):
+        w = jnp.maximum(acc["weight"], 1e-9)
+        return jax.tree.map(lambda a: a / w, acc["grads"])

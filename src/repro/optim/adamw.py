@@ -1,0 +1,81 @@
+"""AdamW + schedules in pure JAX (no optax in this environment).
+
+Matches the paper's training configuration: linear LR schedule with warmup
+(§5.1: peak 1e-4, warmup ratio 0.0025), decoupled weight decay, global-norm
+clipping. Optimizer state mirrors the parameter pytree, so the same sharding
+specs apply (dryrun shards m/v alongside the drafter params).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    m: dict
+    v: dict
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def linear_warmup_schedule(peak: float, total_steps: int,
+                           warmup_ratio: float = 0.0025) -> Callable:
+    warmup = max(int(total_steps * warmup_ratio), 1)
+
+    def sched(step):
+        s = step.astype(jnp.float32)
+        up = peak * s / warmup
+        down = peak * jnp.maximum(total_steps - s, 0.0) / max(
+            total_steps - warmup, 1)
+        return jnp.where(s < warmup, up, down)
+    return sched
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adamw_update(grads, state: AdamWState, params, *,
+                 lr: Callable | float, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.01,
+                 max_grad_norm: float = 1.0) -> Tuple[dict, AdamWState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else jnp.asarray(lr)
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g32
+        v2 = b2 * v + (1 - b2) * jnp.square(g32)
+        u = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+        u = u + weight_decay * p.astype(jnp.float32)
+        return (-lr_t * u).astype(p.dtype), m2, v2
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    flat_p = tdef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    updates = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return updates, AdamWState(step=step, m=new_m, v=new_v), {
+        "grad_norm": gnorm, "lr": lr_t}
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)

@@ -1,0 +1,4 @@
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving import cache_ops
+
+__all__ = ["Engine", "EngineConfig", "cache_ops"]

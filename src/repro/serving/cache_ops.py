@@ -1,0 +1,56 @@
+"""Cache commit after speculative verification.
+
+Attention caches roll back by *position invalidation*: any slot holding a
+position beyond the last accepted token is marked empty (-1) — the next
+write reuses it. Recurrent caches (SSM state, RG-LRU h, conv windows) cannot
+be invalidated in place, so decode forwards emit per-token snapshots
+(models/ssm.py, models/hybrid.py) and commit selects the snapshot of the
+last accepted token.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+_SNAP_LEAVES = ("state", "conv", "h")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for pe in path:
+        parts.append(str(getattr(pe, "key", getattr(pe, "idx", pe))))
+    return "/".join(parts)
+
+
+def commit(cache, snapshots, commit_pos: Array, accept_idx: Array):
+    """cache: model cache pytree; snapshots: matching pytree from
+    ModelOutput.aux["snapshots"] (or None for attention-only models);
+    commit_pos (B,): last valid absolute position; accept_idx (B,): index of
+    the last committed token within the just-verified block."""
+    snap_map = {}
+    if snapshots is not None:
+        flat, _ = jax.tree_util.tree_flatten_with_path(snapshots)
+        snap_map = {_path_str(p): l for p, l in flat}
+
+    def fix(path, leaf):
+        ps = _path_str(path)
+        name = ps.rsplit("/", 1)[-1]
+        if name == "positions":
+            # leaf (..., B, W); B is dim -2
+            cp = commit_pos.reshape((1,) * (leaf.ndim - 2) + (-1, 1))
+            return jnp.where(leaf > cp, -1, leaf)
+        if name in _SNAP_LEAVES and ps in snap_map:
+            snap = snap_map[ps]                    # cache leaf + extra T axis
+            stacked = snap.ndim == leaf.ndim + 1
+            t_axis = 2 if ps.startswith("blocks") else 1
+            b_axis = t_axis - 1
+            idx = accept_idx.reshape(
+                (1,) * b_axis + (-1,) + (1,) * (snap.ndim - b_axis - 1))
+            sel = jnp.take_along_axis(snap, idx, axis=t_axis)
+            return jnp.squeeze(sel, axis=t_axis).astype(leaf.dtype)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, cache)

@@ -1,0 +1,232 @@
+"""Batched speculative-decoding engine (the framework's vLLM analogue).
+
+Static-shape, jit-compiled draft→verify→commit iterations over a fixed batch
+of request slots, with continuous batching (finished slots are refilled from
+a queue). Three drafter modes:
+
+  "parallel" — P-EAGLE: one drafter forward drafts K tokens (paper §2/§5.3)
+  "ar"       — AR EAGLE-3 baseline: K sequential drafter forwards
+  "none"     — vanilla autoregressive decoding (1 target forward per token)
+
+Verification is greedy (prefix match) or lossless rejection sampling.
+Greedy + "parallel"/"ar" reproduces target-greedy output exactly — the
+losslessness property tests rely on this.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DrafterConfig, ModelConfig
+from repro.core import drafter as D
+from repro.core import spec_decode as SD
+from repro.models import get_model
+from repro.serving import cache_ops
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    K: int = 5                       # speculation depth (drafted tokens/iter)
+    max_new_tokens: int = 64
+    greedy: bool = True
+    drafter_mode: str = "parallel"   # parallel | ar | none
+    cache_dtype: str = "float32"     # bfloat16 on accelerators
+    max_len: int = 512               # total positions per slot
+
+
+class Engine:
+    def __init__(self, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
+                 tparams: dict, dparams: Optional[dict], ecfg: EngineConfig,
+                 batch: int):
+        self.tcfg, self.dcfg, self.ecfg = tcfg, dcfg, ecfg
+        self.tparams, self.dparams = tparams, dparams
+        self.batch = batch
+        self.model = get_model(tcfg)
+        self.pos_offset = (tcfg.vision_tokens
+                           if tcfg.family == "vlm" else 0)
+        self._step = jax.jit(functools.partial(self._step_impl))
+        self._prefill = jax.jit(functools.partial(self._prefill_impl))
+
+    # ------------------------------------------------------------------
+    # prefill
+    # ------------------------------------------------------------------
+    def _prefill_impl(self, tparams, dparams, prompts, extras, rng):
+        B, P = prompts.shape
+        cdt = jnp.dtype(self.ecfg.cache_dtype)
+        tcache = self.model.make_cache(B, self.ecfg.max_len, dtype=cdt)
+        out = self.model.forward(tparams, prompts, mode="prefill",
+                                 cache=tcache, collect_taps=True,
+                                 head_last_only=True, **extras)
+        fused = P + self.pos_offset          # positions 0..fused-1 committed
+        first = jnp.argmax(out.logits[:, -1], axis=-1).astype(jnp.int32)
+
+        tokens = jnp.zeros((B, self.ecfg.max_len), jnp.int32)
+        tokens = tokens.at[:, self.pos_offset:self.pos_offset + P].set(prompts)
+        tokens = tokens.at[:, fused].set(first)
+
+        state = {
+            "tokens": tokens,
+            "last": jnp.full((B,), fused, jnp.int32),
+            "taps_last": out.taps[:, -1],
+            "tcache": out.cache,
+            "new_count": jnp.ones((B,), jnp.int32),
+            "iters": jnp.zeros((), jnp.int32),
+            "row_iters": jnp.zeros((), jnp.int32),
+            "committed": jnp.zeros((), jnp.int32),
+            "rng": rng,
+        }
+        if self.ecfg.drafter_mode != "none":
+            dcache = D.make_cache(self.dcfg, B, self.ecfg.max_len, dtype=cdt)
+            if P > 1:
+                pos = (jnp.arange(P - 1, dtype=jnp.int32)[None]
+                       + self.pos_offset)
+                pos = jnp.broadcast_to(pos, (B, P - 1))
+                # taps at fused positions offset..offset+P-2 (text region)
+                dcache = D.extend(self.dcfg, self.tcfg, dparams, dcache,
+                                  prompts[:, 1:], out.taps[:, -P:-1], pos)
+            state["dcache"] = dcache
+        return state
+
+    def prefill(self, prompts: Array, extras: Optional[dict] = None,
+                rng: Optional[Array] = None):
+        return self._prefill(self.tparams, self.dparams, prompts,
+                             extras or {}, rng if rng is not None
+                             else jax.random.PRNGKey(0))
+
+    # ------------------------------------------------------------------
+    # one speculative iteration
+    # ------------------------------------------------------------------
+    def _step_impl(self, tparams, dparams, state):
+        return speculative_step(self.model, self.tcfg, self.dcfg, self.ecfg,
+                                tparams, dparams, state)
+
+
+    # ------------------------------------------------------------------
+    # loops & metrics
+    # ------------------------------------------------------------------
+    def run(self, prompts: Array, extras: Optional[dict] = None,
+            max_iters: int = 10_000) -> Dict[str, Any]:
+        t0 = time.perf_counter()
+        state = self.prefill(prompts, extras)
+        jax.block_until_ready(state["tokens"])
+        t_prefill = time.perf_counter() - t0
+
+        iters = 0
+        t0 = time.perf_counter()
+        while iters < max_iters:
+            state = self._step(self.tparams, self.dparams, state)
+            iters += 1
+            if iters % 8 == 0 or iters < 2:
+                if bool(np.all(np.asarray(state["new_count"])
+                               >= self.ecfg.max_new_tokens)):
+                    break
+        jax.block_until_ready(state["tokens"])
+        t_decode = time.perf_counter() - t0
+
+        new_tok = int(np.sum(np.asarray(state["new_count"])))
+        it = max(int(state["iters"]), 1)
+        row_iters = max(int(state["row_iters"]), 1)
+        return {
+            "state": state,
+            "tokens": np.asarray(state["tokens"]),
+            "new_tokens": new_tok,
+            "iterations": it,
+            "acceptance_length": int(state["committed"]) / row_iters,
+            "prefill_s": t_prefill,
+            "decode_s": t_decode,
+            "otps": new_tok / max(t_decode, 1e-9),
+        }
+
+
+def speculative_step(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
+                 ecfg: EngineConfig, tparams, dparams, state):
+    """One speculative iteration: draft K → verify K+1 → accept → commit.
+
+    Pure function of (params, state) — shared by the Engine and by the
+    dry-run's ``serve_step`` lowering (launch/steps.py)."""
+    B = state["tokens"].shape[0]
+    K = ecfg.K if ecfg.drafter_mode != "none" else 0
+    c = state["last"]
+    tok_next = jnp.take_along_axis(state["tokens"], c[:, None], axis=1)[:, 0]
+    rng, vrng = jax.random.split(state["rng"])
+
+    if ecfg.drafter_mode == "parallel":
+        drafts, dlogits, dcache = D.draft_parallel(
+            dcfg, tcfg, dparams, state["dcache"], tok_next,
+            state["taps_last"], c - 1, K)
+    elif ecfg.drafter_mode == "ar":
+        drafts, dlogits, dcache = D.draft_ar(
+            dcfg, tcfg, dparams, state["dcache"], tok_next,
+            state["taps_last"], c - 1, K)
+    else:
+        drafts = jnp.zeros((B, 0), jnp.int32)
+        dlogits, dcache = None, None
+
+    # target verify over [t_last, d_1..d_K] at positions c..c+K
+    vt = jnp.concatenate([tok_next[:, None], drafts], axis=1)
+    positions = c[:, None] + jnp.arange(K + 1, dtype=jnp.int32)[None]
+    tout = model.forward(tparams, vt, mode="decode",
+                              positions=positions, cache=state["tcache"],
+                              collect_taps=ecfg.drafter_mode != "none")
+
+    if K == 0:
+        accept_len = jnp.zeros((B,), jnp.int32)
+        t_star = jnp.argmax(tout.logits, axis=-1).astype(jnp.int32)
+    elif ecfg.greedy:
+        accept_len, t_star = SD.greedy_verify(drafts, tout.logits)
+    else:
+        accept_len, t_star = SD.rejection_verify(
+            vrng, drafts, jax.nn.softmax(dlogits, axis=-1),
+            jax.nn.softmax(tout.logits, axis=-1))
+
+    active = state["new_count"] < ecfg.max_new_tokens
+    accept_len = jnp.where(active, accept_len, 0)
+
+    # commit target cache (invalidate stale attention slots / select
+    # recurrent snapshots at the last accepted token)
+    tcache = cache_ops.commit(tout.cache, tout.aux.get("snapshots"),
+                              c + accept_len, accept_len)
+
+    # append committed tokens t_star[0..accept_len]
+    idx = c[:, None] + 1 + jnp.arange(K + 1, dtype=jnp.int32)[None]
+    keep = jnp.arange(K + 1)[None] <= accept_len[:, None]
+    keep &= active[:, None]
+    safe_idx = jnp.where(keep, idx, state["tokens"].shape[1])
+    tokens = jax.vmap(lambda t, i, v: t.at[i].set(v, mode="drop"))(
+        state["tokens"], safe_idx, t_star)
+
+    new_last = jnp.where(active, c + accept_len + 1, c)
+    taps_last = state["taps_last"]
+    if ecfg.drafter_mode != "none":
+        taps_new = jnp.take_along_axis(
+            tout.taps, accept_len[:, None, None], axis=1)[:, 0]
+        taps_last = jnp.where(active[:, None], taps_new, taps_last)
+        # extend drafter cache across the verified block (stale tail is
+        # auto-invalidated by the next positional write)
+        dcache = D.extend(dcfg, tcfg, dparams, dcache, t_star, tout.taps,
+                          positions)
+
+    ncommit = jnp.where(active, accept_len + 1, 0)
+    new_state = dict(
+        tokens=tokens,
+        last=new_last,
+        taps_last=taps_last,
+        tcache=tcache,
+        new_count=state["new_count"] + ncommit,
+        iters=state["iters"] + jnp.any(active).astype(jnp.int32),
+        row_iters=state["row_iters"] + jnp.sum(active.astype(jnp.int32)),
+        committed=state["committed"] + jnp.sum(ncommit),
+        rng=rng,
+    )
+    if ecfg.drafter_mode != "none":
+        new_state["dcache"] = dcache
+    return new_state
+

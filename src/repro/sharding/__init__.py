@@ -1,0 +1,5 @@
+from repro.sharding.utils import shard_hint, axis_size, batch_axes
+from repro.sharding.rules import param_specs, cache_specs, DRAFTER_RULES
+
+__all__ = ["shard_hint", "axis_size", "batch_axes", "param_specs",
+           "cache_specs", "DRAFTER_RULES"]

@@ -1,0 +1,11 @@
+import os
+import sys
+
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
+# and benchmarks must see the real single CPU device. Multi-device tests
+# shell out to subprocesses (tests/test_dryrun.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

