@@ -110,6 +110,16 @@ def eval_engine(arch, dcfg, dparams, *, K=5, mode="parallel", batch=12,
     return r
 
 
+def longtail_budgets(n_requests: int, max_new: int, rng) -> list:
+    """Per-request max_new_tokens for a long-tail serving mix: ~1/4 long
+    (full budget) requests, the rest short. Shared by table11 and
+    examples/serve_batched.py so the example demonstrates the exact
+    distribution the benchmark measures."""
+    return [max_new if i % 4 == 0
+            else int(rng.integers(3, max(max_new // 3, 4)))
+            for i in range(n_requests)]
+
+
 def timed(fn, *a, repeats=3, **k):
     fn(*a, **k)  # warmup/compile
     ts = []

@@ -1,41 +1,35 @@
-"""End-to-end serving driver: batched speculative decoding with a request
-queue (continuous batching) — the paper's deployment scenario, comparing
-vanilla AR decoding, AR EAGLE-3 drafting, and P-EAGLE parallel drafting at
-several speculation depths.
+"""End-to-end serving driver: batched speculative decoding under a request
+queue — the paper's deployment scenario, comparing vanilla AR decoding,
+AR EAGLE-3 drafting, and P-EAGLE parallel drafting at several speculation
+depths, each under BOTH batching disciplines:
+
+  round-based   — fixed batch, queue refilled only between full generation
+                  rounds (every round waits for its slowest member); the
+                  pre-scheduler baseline (serving.serve_round_based)
+  continuous    — per-slot refill mid-stream via serving.Scheduler: a
+                  finished slot is reused immediately
+
+Requests get heterogeneous max_new_tokens budgets, so continuous batching's
+straggler win is visible in the OTPS column.
 
     PYTHONPATH=src python examples/serve_batched.py [--requests 12]
 """
 import argparse
-import sys, os, time
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import longtail_budgets
 from repro.configs import DrafterConfig, get_config
 from repro.data import MTPPipeline, self_generated_corpus
 from repro.models import get_model
-from repro.serving import Engine, EngineConfig
+from repro.serving import (Engine, EngineConfig, Request, Scheduler,
+                           serve_round_based)
 from repro.training import Trainer, TrainConfig
-
-
-def serve_queue(eng, prompts_list, batch):
-    """Continuous batching (lite): fixed batch slots, queue refills between
-    generation rounds."""
-    done, t0 = [], time.perf_counter()
-    queue = list(prompts_list)
-    while queue:
-        cur = queue[:batch]
-        queue = queue[batch:]
-        while len(cur) < batch:           # pad final round
-            cur.append(cur[-1])
-        r = eng.run(jnp.stack(cur))
-        done.append(r)
-    wall = time.perf_counter() - t0
-    toks = sum(r["new_tokens"] for r in done)
-    al = float(np.mean([r["acceptance_length"] for r in done]))
-    return toks / wall, al
 
 
 def main():
@@ -43,6 +37,8 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--sync-every", type=int, default=4,
+                    help="scheduler iterations between host syncs")
     args = ap.parse_args()
 
     tcfg = get_config("qwen2-1.5b").reduced()
@@ -65,7 +61,10 @@ def main():
 
     rng = np.random.default_rng(7)
     rows = rng.choice(len(corpus), args.requests, replace=False)
-    prompts = [jnp.asarray(corpus[i, :6]) for i in rows]
+    prompts = [np.asarray(corpus[i, :6]) for i in rows]
+    # long-tail budgets (1/4 long, rest short — realistic request mix): the
+    # straggler effect continuous batching removes; same mix as table11
+    budgets = longtail_budgets(args.requests, args.max_new, rng)
 
     def make(mode, dcfg, dp, K):
         return Engine(tcfg, dcfg, tparams, dp,
@@ -73,16 +72,32 @@ def main():
                                    drafter_mode=mode, max_len=128),
                       args.batch)
 
-    otps0, _ = serve_queue(make("none", None, None, 0), prompts, args.batch)
-    print(f"{'vanilla AR':16s} OTPS={otps0:7.1f}  (baseline)")
+    def bench(eng):
+        """(round-based OTPS, continuous OTPS, continuous AL) — each measured
+        on a warm second run so compile time isn't counted."""
+        rb = co = None
+        for _ in range(2):
+            rb = serve_round_based(eng, prompts, budgets)
+            co = Scheduler(eng, sync_every=args.sync_every).serve(
+                [Request(p, max_new_tokens=b)
+                 for p, b in zip(prompts, budgets)])
+        return rb["otps"], co["otps"], co["mean_acceptance_length"]
+
+    hdr = (f"{'engine':16s} {'round OTPS':>11s} {'cont OTPS':>11s} "
+           f"{'cont/round':>10s} {'AL':>5s}")
+    print(hdr + "\n" + "-" * len(hdr))
+
+    rb0, co0, _ = bench(make("none", None, None, 0))
+    print(f"{'vanilla AR':16s} {rb0:11.1f} {co0:11.1f} {co0 / rb0:9.2f}x"
+          f" {'—':>5s}")
     for K in (3, 5, 7):
-        o_a, al_a = serve_queue(make("ar", dcfg_a, tr_a.dparams, K),
-                                prompts, args.batch)
-        o_p, al_p = serve_queue(make("parallel", dcfg_p, tr_p.dparams, K),
-                                prompts, args.batch)
-        print(f"K={K}: AR-EAGLE OTPS={o_a:7.1f} (AL={al_a:.2f})   "
-              f"P-EAGLE OTPS={o_p:7.1f} (AL={al_p:.2f})   "
-              f"P/AR={o_p / o_a:.2f}x  P/van={o_p / otps0:.2f}x")
+        rb_a, co_a, al_a = bench(make("ar", dcfg_a, tr_a.dparams, K))
+        rb_p, co_p, al_p = bench(make("parallel", dcfg_p, tr_p.dparams, K))
+        print(f"{f'AR-EAGLE K={K}':16s} {rb_a:11.1f} {co_a:11.1f} "
+              f"{co_a / rb_a:9.2f}x {al_a:5.2f}")
+        print(f"{f'P-EAGLE  K={K}':16s} {rb_p:11.1f} {co_p:11.1f} "
+              f"{co_p / rb_p:9.2f}x {al_p:5.2f}   "
+              f"(P/AR cont: {co_p / co_a:.2f}x, P/vanilla: {co_p / co0:.2f}x)")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,12 @@
-"""Serving launcher: load a trained drafter checkpoint and serve batched
-speculative decoding, printing OTPS/acceptance stats.
+"""Serving launcher: load a trained drafter checkpoint and serve a queue of
+requests through the continuous-batching scheduler, printing per-request and
+aggregate OTPS / acceptance / latency stats.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
-        --ckpt results/ckpt --mode parallel --k 5
+        --ckpt results/ckpt --mode parallel --k 5 --requests 12
+
+``--round-based`` serves the same queue with the pre-scheduler baseline
+(batch refilled only between full generation rounds) for comparison.
 """
 from __future__ import annotations
 
@@ -16,7 +20,8 @@ from repro.checkpoint import load_pytree
 from repro.configs import DrafterConfig, get_config
 from repro.core import drafter as D
 from repro.models import get_model, make_extras
-from repro.serving import Engine, EngineConfig
+from repro.serving import (Engine, EngineConfig, Request, Scheduler,
+                           serve_round_based)
 
 
 def main():
@@ -29,7 +34,13 @@ def main():
     ap.add_argument("--k", type=int, default=5)
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--sync-every", type=int, default=1,
+                    help="speculative iterations between scheduler host syncs")
+    ap.add_argument("--round-based", action="store_true",
+                    help="also run the round-based baseline on the same queue")
     args = ap.parse_args()
 
     reduced = args.reduced or jax.default_backend() != "tpu"
@@ -56,15 +67,48 @@ def main():
                  EngineConfig(K=args.k, max_new_tokens=args.max_new,
                               drafter_mode=args.mode, max_len=256),
                  args.batch)
-    prompts = jax.random.randint(key, (args.batch, 8), 0,
-                                 tcfg.vocab_size - 2)
-    extras = (make_extras(tcfg, args.batch, "prefill", key)
-              if tcfg.family in ("vlm", "encdec") else {})
-    r = eng.run(prompts, extras)
-    r = eng.run(prompts, extras)   # steady-state timing
-    print(f"mode={args.mode} K={args.k}: OTPS={r['otps']:.1f} "
-          f"AL={r['acceptance_length']:.2f} "
-          f"({r['new_tokens']} tokens, {r['iterations']} iterations)")
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, tcfg.vocab_size - 2, size=8).astype(np.int32)
+               for _ in range(args.requests)]
+    budgets = rng.integers(max(args.max_new // 2, 1), args.max_new + 1,
+                           size=args.requests).tolist()
+
+    if tcfg.family in ("vlm", "encdec"):
+        # the scheduler can't admit per-request extras yet (ROADMAP item);
+        # serve these families whole-batch like the pre-scheduler launcher
+        # (cycle prompts so the batch is full even when requests < batch)
+        batch_prompts = jnp.stack(
+            [prompts[i % len(prompts)] for i in range(args.batch)])
+        extras = make_extras(tcfg, args.batch, "prefill", key)
+        r = eng.run(batch_prompts, extras)
+        r = eng.run(batch_prompts, extras)   # steady-state timing
+        print(f"mode={args.mode} K={args.k} (whole-batch, {tcfg.family}): "
+              f"OTPS={r['otps']:.1f} AL={r['acceptance_length']:.2f} "
+              f"({r['new_tokens']} tokens, {r['iterations']} iterations)")
+        return
+
+    sched = Scheduler(eng, eos_id=args.eos_id, sync_every=args.sync_every)
+    rep = None
+    for _ in range(2):      # second run = warm, compile excluded
+        rep = sched.serve([Request(p, max_new_tokens=b)
+                           for p, b in zip(prompts, budgets)])
+    print(f"mode={args.mode} K={args.k} batch={args.batch} "
+          f"requests={rep['n_requests']}: OTPS={rep['otps']:.1f} "
+          f"AL={rep['mean_acceptance_length']:.2f} "
+          f"({rep['total_new_tokens']} tokens, {rep['iterations']} iterations,"
+          f" mean latency {rep['mean_latency_s'] * 1e3:.0f} ms)")
+    for r in rep["results"]:
+        print(f"  req {r['rid']:3d}: {r['n_new']:3d} tok in {r['iters']:3d} "
+              f"iters  AL={r['acceptance_length']:.2f}  "
+              f"latency={r['latency_s'] * 1e3:6.1f} ms")
+
+    if args.round_based:
+        rb = None
+        for _ in range(2):      # same per-request budgets as the scheduler
+            rb = serve_round_based(eng, prompts, budgets)
+        print(f"round-based baseline: OTPS={rb['otps']:.1f} "
+              f"({rb['rounds']} rounds) → continuous is "
+              f"{rep['otps'] / max(rb['otps'], 1e-9):.2f}x")
 
 
 if __name__ == "__main__":

@@ -19,6 +19,7 @@ the mesh context.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import math
 from typing import Optional
@@ -34,7 +35,8 @@ from repro.core import losses
 from repro.models import extra_input_shapes, get_model
 from repro.optim import adamw_init, adamw_update, apply_updates, \
     linear_warmup_schedule
-from repro.serving.engine import EngineConfig, speculative_step
+from repro.serving.engine import EngineConfig, make_decode_state, \
+    speculative_step
 from repro.sharding.rules import cache_specs, param_specs
 from repro.sharding.utils import spec_for
 from repro.training.trainer import TrainConfig
@@ -44,7 +46,20 @@ def mesh_context(mesh):
     """Enter the mesh so shard_hint / spec_for see it during tracing."""
     if hasattr(jax, "set_mesh"):
         return jax.set_mesh(mesh)       # context manager in jax >= 0.7
-    return jax.sharding.use_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return _legacy_mesh_context(mesh)   # jax 0.4.x: physical Mesh context
+
+
+@contextlib.contextmanager
+def _legacy_mesh_context(mesh):
+    from repro.sharding import utils as SU
+    SU._FALLBACK_MESH.append(mesh)
+    try:
+        with mesh:                      # resource env for bare-P constraints
+            yield mesh
+    finally:
+        SU._FALLBACK_MESH.pop()
 
 
 def batch_spec(mesh, *trailing):
@@ -235,19 +250,10 @@ def build_serve_step(tcfg: ModelConfig, dcfg: DrafterConfig,
                                 state)
 
     def make_state():
-        ntaps = 3 * tcfg.d_model
-        return {
-            "tokens": jnp.zeros((GB, max_len), jnp.int32),
-            "last": jnp.full((GB,), S, jnp.int32),
-            "taps_last": jnp.zeros((GB, ntaps), jnp.bfloat16),
-            "tcache": model.make_cache(GB, max_len, dtype=cache_dtype),
-            "dcache": D.make_cache(dcfg, GB, max_len, dtype=cache_dtype),
-            "new_count": jnp.ones((GB,), jnp.int32),
-            "iters": jnp.zeros((), jnp.int32),
-            "row_iters": jnp.zeros((), jnp.int32),
-            "committed": jnp.zeros((), jnp.int32),
-            "rng": jax.random.PRNGKey(0),
-        }
+        # one skeleton definition (serving/engine.py) shared with the Engine
+        return make_decode_state(model, tcfg, dcfg, ecfg, GB,
+                                 cache_dtype=cache_dtype,
+                                 taps_dtype=jnp.bfloat16, last_fill=S)
 
     def make_inputs(mesh):
         tparams_sds = eval_shape_tree(model.init, jax.random.PRNGKey(0))
@@ -264,6 +270,7 @@ def build_serve_step(tcfg: ModelConfig, dcfg: DrafterConfig,
                 "tcache": cache_specs(state_sds["tcache"]),
                 "dcache": cache_specs(state_sds["dcache"]),
                 "new_count": spec_for((GB,), bsp[0]),
+                "slot_iters": spec_for((GB,), bsp[0]),
                 "iters": P(), "row_iters": P(), "committed": P(),
                 "rng": P(),
             }

@@ -1,4 +1,6 @@
 from repro.serving.engine import Engine, EngineConfig
+from repro.serving.scheduler import Request, Scheduler, serve_round_based
 from repro.serving import cache_ops
 
-__all__ = ["Engine", "EngineConfig", "cache_ops"]
+__all__ = ["Engine", "EngineConfig", "Request", "Scheduler",
+           "serve_round_based", "cache_ops"]

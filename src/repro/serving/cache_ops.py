@@ -1,4 +1,5 @@
-"""Cache commit after speculative verification.
+"""Cache commit after speculative verification, and per-slot batch surgery
+for continuous batching.
 
 Attention caches roll back by *position invalidation*: any slot holding a
 position beyond the last accepted token is marked empty (-1) — the next
@@ -6,6 +7,14 @@ write reuses it. Recurrent caches (SSM state, RG-LRU h, conv windows) cannot
 be invalidated in place, so decode forwards emit per-token snapshots
 (models/ssm.py, models/hybrid.py) and commit selects the snapshot of the
 last accepted token.
+
+Per-slot surgery (``batch_axes`` / ``write_slot`` / ``reset_slot``) is what
+lets the scheduler admit a request *into a live batch*: a prompt is prefilled
+as a batch-1 state, then every batched leaf's row 0 is scattered into the
+victim slot of the running state. The batch axis of each leaf is inferred
+structurally — by diffing abstract evaluations of the same state at two batch
+sizes — so the machinery is agnostic to cache layout (stacked super-block
+KV, ring buffers, recurrent snapshots, drafter caches alike).
 """
 from __future__ import annotations
 
@@ -16,6 +25,7 @@ import jax.numpy as jnp
 
 Array = jax.Array
 _SNAP_LEAVES = ("state", "conv", "h")
+NO_BATCH = -1          # batch_axes sentinel: leaf has no batch dimension
 
 
 def _path_str(path) -> str:
@@ -54,3 +64,56 @@ def commit(cache, snapshots, commit_pos: Array, accept_idx: Array):
         return leaf
 
     return jax.tree_util.tree_map_with_path(fix, cache)
+
+
+# ---------------------------------------------------------------------------
+# per-slot batch surgery (continuous batching)
+# ---------------------------------------------------------------------------
+
+def batch_axes(tree_b1, tree_b2):
+    """Infer each leaf's batch axis by diffing two abstract evaluations of the
+    same pytree built at two different batch sizes (jax.eval_shape — no device
+    work). Returns a matching pytree of ints: the first axis whose extent
+    differs, or ``NO_BATCH`` for leaves without a batch dimension (scalar
+    counters, rng keys, ring flags)."""
+    def ax(a, b):
+        for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+            if x != y:
+                return i
+        return NO_BATCH
+    return jax.tree.map(ax, tree_b1, tree_b2)
+
+
+def write_slot(dst, src, slot: Array, axes):
+    """Scatter batch row 0 of ``src`` (a batch-1 state/cache pytree) into
+    batch row ``slot`` of ``dst``. Leaves without a batch axis (``axes`` leaf
+    == NO_BATCH: scalar counters, rng, ring flags) keep their dst value.
+    jit-friendly: ``slot`` may be traced; ``axes`` must be static."""
+    def w(d, s, ax):
+        if ax < 0:
+            return d
+        row = jax.lax.index_in_dim(s, 0, axis=ax, keepdims=True)
+        return jax.lax.dynamic_update_slice_in_dim(
+            d, row.astype(d.dtype), slot, axis=ax)
+    return jax.tree.map(w, dst, src, axes)
+
+
+def reset_slot(tree, slot: Array, axes, fills: Optional[dict] = None):
+    """Blank batch row ``slot``: cache ``positions`` leaves become -1 (empty —
+    nothing to attend), every other batched leaf becomes 0. ``fills`` overrides
+    the fill value by leaf name (e.g. {"new_count": max_new} to keep a freed
+    slot frozen under the Engine's budget check). Leaves without a batch axis
+    are untouched."""
+    fills = fills or {}
+
+    def r(path, d, ax):
+        if ax < 0:
+            return d
+        name = _path_str(path).rsplit("/", 1)[-1]
+        fill = fills.get(name, -1 if name == "positions" else 0)
+        shape = list(d.shape)
+        shape[ax] = 1
+        row = jnp.full(shape, fill, d.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(d, row, slot, axis=ax)
+
+    return jax.tree_util.tree_map_with_path(r, tree, axes)

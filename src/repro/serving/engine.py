@@ -1,8 +1,11 @@
 """Batched speculative-decoding engine (the framework's vLLM analogue).
 
 Static-shape, jit-compiled draft→verify→commit iterations over a fixed batch
-of request slots, with continuous batching (finished slots are refilled from
-a queue). Three drafter modes:
+of request slots. The request-lifecycle layer on top — per-slot admission
+into a live batch, immediate slot free on EOS/budget, per-request metrics —
+is serving/scheduler.py; this module supplies the per-slot primitives
+(``prefill_into_slot``, ``free_slot``, ``step`` with an active mask).
+Three drafter modes:
 
   "parallel" — P-EAGLE: one drafter forward drafts K tokens (paper §2/§5.3)
   "ar"       — AR EAGLE-3 baseline: K sequential drafter forwards
@@ -14,7 +17,6 @@ losslessness property tests rely on this.
 """
 from __future__ import annotations
 
-import functools
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
@@ -42,6 +44,35 @@ class EngineConfig:
     max_len: int = 512               # total positions per slot
 
 
+def make_decode_state(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
+                      ecfg: EngineConfig, batch: int, *,
+                      cache_dtype=None, taps_dtype=None,
+                      last_fill: int = 0, new_count_fill: int = 1,
+                      rng: Optional[Array] = None) -> dict:
+    """The ONE definition of the decode-state skeleton (keys + shapes).
+
+    Engine prefill, Engine.blank_state, and the dry-run's serve_step state
+    template (launch/steps.py) all build from this, so a new state leaf added
+    for speculative_step can't silently go missing at one of the sites."""
+    cdt = jnp.dtype(ecfg.cache_dtype) if cache_dtype is None else cache_dtype
+    state = {
+        "tokens": jnp.zeros((batch, ecfg.max_len), jnp.int32),
+        "last": jnp.full((batch,), last_fill, jnp.int32),
+        "taps_last": jnp.zeros((batch, 3 * tcfg.d_model),
+                               taps_dtype if taps_dtype is not None else cdt),
+        "tcache": model.make_cache(batch, ecfg.max_len, dtype=cdt),
+        "new_count": jnp.full((batch,), new_count_fill, jnp.int32),
+        "slot_iters": jnp.zeros((batch,), jnp.int32),
+        "iters": jnp.zeros((), jnp.int32),
+        "row_iters": jnp.zeros((), jnp.int32),
+        "committed": jnp.zeros((), jnp.int32),
+        "rng": rng if rng is not None else jax.random.PRNGKey(0),
+    }
+    if ecfg.drafter_mode != "none":
+        state["dcache"] = D.make_cache(dcfg, batch, ecfg.max_len, dtype=cdt)
+    return state
+
+
 class Engine:
     def __init__(self, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
                  tparams: dict, dparams: Optional[dict], ecfg: EngineConfig,
@@ -52,39 +83,38 @@ class Engine:
         self.model = get_model(tcfg)
         self.pos_offset = (tcfg.vision_tokens
                            if tcfg.family == "vlm" else 0)
-        self._step = jax.jit(functools.partial(self._step_impl))
-        self._prefill = jax.jit(functools.partial(self._prefill_impl))
+        self._step = jax.jit(self._step_impl)
+        self._prefill = jax.jit(self._prefill_impl)
+        self._sched_step = jax.jit(self._sched_step_impl)
+        self._admit = jax.jit(self._admit_impl)
+        self._free = jax.jit(self._free_impl)
+        self._slot_axes = None
 
     # ------------------------------------------------------------------
     # prefill
     # ------------------------------------------------------------------
     def _prefill_impl(self, tparams, dparams, prompts, extras, rng):
         B, P = prompts.shape
-        cdt = jnp.dtype(self.ecfg.cache_dtype)
-        tcache = self.model.make_cache(B, self.ecfg.max_len, dtype=cdt)
+        state = make_decode_state(self.model, self.tcfg, self.dcfg,
+                                  self.ecfg, B, rng=rng)
         out = self.model.forward(tparams, prompts, mode="prefill",
-                                 cache=tcache, collect_taps=True,
+                                 cache=state["tcache"], collect_taps=True,
                                  head_last_only=True, **extras)
         fused = P + self.pos_offset          # positions 0..fused-1 committed
         first = jnp.argmax(out.logits[:, -1], axis=-1).astype(jnp.int32)
 
-        tokens = jnp.zeros((B, self.ecfg.max_len), jnp.int32)
+        tokens = state["tokens"]
         tokens = tokens.at[:, self.pos_offset:self.pos_offset + P].set(prompts)
         tokens = tokens.at[:, fused].set(first)
 
-        state = {
-            "tokens": tokens,
-            "last": jnp.full((B,), fused, jnp.int32),
-            "taps_last": out.taps[:, -1],
-            "tcache": out.cache,
-            "new_count": jnp.ones((B,), jnp.int32),
-            "iters": jnp.zeros((), jnp.int32),
-            "row_iters": jnp.zeros((), jnp.int32),
-            "committed": jnp.zeros((), jnp.int32),
-            "rng": rng,
-        }
+        state.update(
+            tokens=tokens,
+            last=jnp.full((B,), fused, jnp.int32),
+            taps_last=out.taps[:, -1],
+            tcache=out.cache,
+        )
         if self.ecfg.drafter_mode != "none":
-            dcache = D.make_cache(self.dcfg, B, self.ecfg.max_len, dtype=cdt)
+            dcache = state["dcache"]
             if P > 1:
                 pos = (jnp.arange(P - 1, dtype=jnp.int32)[None]
                        + self.pos_offset)
@@ -108,6 +138,90 @@ class Engine:
         return speculative_step(self.model, self.tcfg, self.dcfg, self.ecfg,
                                 tparams, dparams, state)
 
+    # ------------------------------------------------------------------
+    # per-slot lifecycle (continuous batching; serving/scheduler.py)
+    # ------------------------------------------------------------------
+    @property
+    def slot_axes(self):
+        """Per-leaf batch axis of the decode state, inferred structurally
+        (cache_ops.batch_axes) from abstract prefills at batch 1 vs 2.
+        Computed once; static thereafter (required: axes feed lax slicing)."""
+        if self._slot_axes is None:
+            def pf(b):
+                return jax.eval_shape(
+                    self._prefill_impl, self.tparams, self.dparams,
+                    jax.ShapeDtypeStruct((b, 4), jnp.int32), {},
+                    jax.ShapeDtypeStruct((2,), jnp.uint32))
+            self._slot_axes = cache_ops.batch_axes(pf(1), pf(2))
+        return self._slot_axes
+
+    def blank_state(self, rng: Optional[Array] = None) -> dict:
+        """An all-idle batch state: empty caches (positions -1), zero tokens,
+        every slot frozen (new_count == max_new_tokens so the budget check
+        keeps it inert). Slots come alive via ``prefill_into_slot``."""
+        sds = jax.eval_shape(
+            self._prefill_impl, self.tparams, self.dparams,
+            jax.ShapeDtypeStruct((self.batch, 4), jnp.int32), {},
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return make_decode_state(
+            self.model, self.tcfg, self.dcfg, self.ecfg, self.batch,
+            taps_dtype=sds["taps_last"].dtype,
+            new_count_fill=self.ecfg.max_new_tokens, rng=rng)
+
+    def prefill_into_slot(self, state: dict, prompt, slot: int,
+                          extras: Optional[dict] = None,
+                          rng: Optional[Array] = None):
+        """Admit one request into batch row ``slot`` of a live state: prefill
+        the prompt as a batch-1 state, then scatter every batched leaf's row
+        into the slot (cache_ops.write_slot). Neighbor slots are untouched —
+        rows are independent through attention, caches, and verification, so
+        mid-stream admission cannot perturb already-decoding requests.
+
+        Returns (new_state, first_token, last_pos): the prefill already
+        commits one token (new_count starts at 1 for the slot)."""
+        prompt = jnp.asarray(prompt, jnp.int32)[None]
+        src = self._prefill(self.tparams, self.dparams, prompt, extras or {},
+                            rng if rng is not None else jax.random.PRNGKey(0))
+        state = self._admit(state, src, jnp.asarray(slot, jnp.int32))
+        last = int(src["last"][0])
+        first = int(src["tokens"][0, last])
+        return state, first, last
+
+    def _admit_impl(self, dst, src, slot):
+        return cache_ops.write_slot(dst, src, slot, self.slot_axes)
+
+    def free_slot(self, state: dict, slot: int) -> dict:
+        """Reset one slot's cache/token/taps rows to blank (positions -1) and
+        refreeze it (new_count = max_new_tokens) so it idles until the next
+        admission. Functionally optional — an inactive slot's garbage is fully
+        overwritten on admit — but keeps freed rows inert and cheap to audit."""
+        return self._free(state, jnp.asarray(slot, jnp.int32))
+
+    def _free_impl(self, state, slot):
+        return cache_ops.reset_slot(
+            state, slot, self.slot_axes,
+            fills={"new_count": self.ecfg.max_new_tokens})
+
+    def step(self, state: dict, active: Optional[Array] = None,
+             max_new: Optional[Array] = None) -> dict:
+        """One jitted speculative iteration. Without arguments this is the
+        legacy whole-batch step; the scheduler passes ``active`` (B,) bool and
+        per-slot ``max_new`` (B,) int32."""
+        if active is None and max_new is None:
+            return self._step(self.tparams, self.dparams, state)
+        B = state["tokens"].shape[0]
+        if active is None:
+            active = jnp.ones((B,), bool)
+        if max_new is None:
+            max_new = jnp.full((B,), self.ecfg.max_new_tokens, jnp.int32)
+        return self._sched_step(self.tparams, self.dparams, state,
+                                jnp.asarray(active),
+                                jnp.asarray(max_new, jnp.int32))
+
+    def _sched_step_impl(self, tparams, dparams, state, active, max_new):
+        return speculative_step(self.model, self.tcfg, self.dcfg, self.ecfg,
+                                tparams, dparams, state,
+                                active_mask=active, max_new=max_new)
 
     # ------------------------------------------------------------------
     # loops & metrics
@@ -147,11 +261,21 @@ class Engine:
 
 
 def speculative_step(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
-                 ecfg: EngineConfig, tparams, dparams, state):
+                 ecfg: EngineConfig, tparams, dparams, state,
+                 active_mask: Optional[Array] = None,
+                 max_new: Optional[Array] = None):
     """One speculative iteration: draft K → verify K+1 → accept → commit.
 
     Pure function of (params, state) — shared by the Engine and by the
-    dry-run's ``serve_step`` lowering (launch/steps.py)."""
+    dry-run's ``serve_step`` lowering (launch/steps.py).
+
+    ``active_mask`` (B,) bool and ``max_new`` (B,) int32 are the continuous-
+    batching hooks: the scheduler masks out free/finished slots and supplies
+    per-request token budgets. Both default to the legacy whole-batch
+    behavior (all slots live, shared ``ecfg.max_new_tokens`` budget), so
+    existing callers are unchanged. A masked row commits nothing and its
+    last/taps/counters are frozen; its cache rows receive only garbage that
+    the next ``Engine.prefill_into_slot`` fully overwrites."""
     B = state["tokens"].shape[0]
     K = ecfg.K if ecfg.drafter_mode != "none" else 0
     c = state["last"]
@@ -187,7 +311,11 @@ def speculative_step(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
             vrng, drafts, jax.nn.softmax(dlogits, axis=-1),
             jax.nn.softmax(tout.logits, axis=-1))
 
-    active = state["new_count"] < ecfg.max_new_tokens
+    budget = jnp.asarray(ecfg.max_new_tokens, jnp.int32) \
+        if max_new is None else max_new
+    active = state["new_count"] < budget
+    if active_mask is not None:
+        active &= active_mask
     accept_len = jnp.where(active, accept_len, 0)
 
     # commit target cache (invalidate stale attention slots / select
@@ -221,6 +349,7 @@ def speculative_step(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
         taps_last=taps_last,
         tcache=tcache,
         new_count=state["new_count"] + ncommit,
+        slot_iters=state["slot_iters"] + active.astype(jnp.int32),
         iters=state["iters"] + jnp.any(active).astype(jnp.int32),
         row_iters=state["row_iters"] + jnp.sum(active.astype(jnp.int32)),
         committed=state["committed"] + jnp.sum(ncommit),

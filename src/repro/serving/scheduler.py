@@ -1,0 +1,308 @@
+"""Per-slot continuous batching scheduler — the framework's request-lifecycle
+layer over serving/engine.py (what vLLM's scheduler is to its model runner,
+and what the paper's deployed-serving numbers §5.4 implicitly rely on).
+
+Request lifecycle::
+
+    QUEUED ──admit──► PREFILLING ──► DECODING ──EOS / budget──► FINISHED
+              ▲                                      │
+              └────────── slot freed, next request ──┘
+
+The engine's decode state is a fixed-shape batch of B *slots*; every
+speculative iteration steps all B rows under a per-slot active mask. When a
+request finishes (per-request ``max_new_tokens`` budget or EOS), its slot is
+freed *immediately* — mid-stream — and the next queued request is prefilled
+straight into the live batch (``Engine.prefill_into_slot``), not held until
+the whole batch drains. This is what separates continuous batching from the
+old round-based ``serve_round_based`` baseline, which refills only between
+full generation rounds and so pays the max-straggler latency every round.
+
+Row independence is the correctness backbone: attention, cache updates, and
+verification are all per-row, so admitting into slot *i* cannot change what
+slot *j* emits (tests/test_scheduler.py asserts this token-for-token; note
+MoE targets with capacity-based routing couple rows and are excluded from
+that guarantee).
+
+Termination is host-driven: after each iteration the scheduler reads back
+the small per-slot counters plus newly committed tokens, detects per-request
+EOS (output trimmed at the first EOS, vLLM semantics) and budget exhaustion,
+and retires slots. Speculative commits can overshoot a budget by up to K;
+overshoot tokens are trimmed from the emitted output.
+
+Quickstart::
+
+    eng = Engine(tcfg, dcfg, tparams, dparams, EngineConfig(...), batch=4)
+    sched = Scheduler(eng, eos_id=None)
+    report = sched.serve([Request(prompt) for prompt in prompts])
+    report["otps"], report["results"][0]["tokens"], ...
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import Engine
+
+QUEUED = "queued"
+PREFILLING = "prefilling"
+DECODING = "decoding"
+FINISHED = "finished"
+
+_rid_counter = itertools.count()
+
+
+@dataclass
+class Request:
+    """One generation request. ``prompt`` is a 1-D int32 token array; the
+    prefill commits the first generated token, which counts toward
+    ``max_new_tokens`` (None = the engine's default budget)."""
+    prompt: Any
+    max_new_tokens: Optional[int] = None
+    rid: int = field(default_factory=lambda: next(_rid_counter))
+    # lifecycle (managed by the scheduler)
+    status: str = QUEUED
+    slot: Optional[int] = None
+    out_tokens: List[int] = field(default_factory=list)
+    # metrics
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_finish: float = 0.0
+    iters: int = 0                 # decode iterations this request was live
+    # internal bookkeeping
+    _prev_new: int = 0             # device-side new_count at last sync
+    _prev_last: int = 0            # device-side last position at last sync
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError("empty prompt")
+
+    @property
+    def acceptance_length(self) -> float:
+        """Mean tokens committed per decode iteration (prefill token
+        excluded) — the paper's AL, per request."""
+        return (self._prev_new - 1) / max(self.iters, 1)
+
+
+class Scheduler:
+    """Continuous-batching loop over an Engine's B slots.
+
+    ``eos_id`` — token id that terminates a request (output trimmed at the
+    first occurrence, which the losslessness tests rely on being identical
+    across drafter modes). ``free_on_finish`` — blank freed slots' cache rows
+    (optional; admission fully overwrites a slot either way).
+
+    ``sync_every`` — speculative iterations dispatched between host syncs.
+    1 gives the most responsive admission/EOS handling; higher values let jax
+    pipeline dispatch (the whole-batch Engine.run polls every 8) at the cost
+    of slots idling up to sync_every-1 iterations after finishing. Outputs
+    are identical either way: per-slot budgets freeze rows ON DEVICE, and
+    EOS/budget trimming is positional, not timing-dependent.
+    """
+
+    def __init__(self, engine: Engine, eos_id: Optional[int] = None,
+                 free_on_finish: bool = True, sync_every: int = 1):
+        self.engine = engine
+        self.eos_id = eos_id
+        self.free_on_finish = free_on_finish
+        self.sync_every = max(int(sync_every), 1)
+        if engine.tcfg.family in ("vlm", "encdec"):
+            raise NotImplementedError(
+                "per-slot admission needs per-request extras; vlm/encdec "
+                "targets are not yet supported by the scheduler")
+
+    # ------------------------------------------------------------------
+    def serve(self, requests: Sequence, rng: Optional[jax.Array] = None,
+              max_iters: int = 100_000) -> Dict[str, Any]:
+        """Run every request to completion; returns aggregate + per-request
+        metrics. ``requests`` entries may be Request objects or raw prompt
+        arrays (coerced with the engine's default budget)."""
+        eng = self.engine
+        B = eng.batch
+        default_budget = eng.ecfg.max_new_tokens
+
+        reqs = [r if isinstance(r, Request) else Request(r) for r in requests]
+        t_start = time.perf_counter()
+        for r in reqs:
+            if r.status != QUEUED:
+                raise ValueError(
+                    f"request {r.rid} is {r.status}; Request objects are "
+                    "single-use — submit a fresh one")
+            r.t_submit = t_start
+            if r.max_new_tokens is None:
+                r.max_new_tokens = default_budget
+            # prompt + budget + worst-case speculative overshoot must fit the
+            # cache, else the slot could never reach its budget
+            need = (r.prompt.size + eng.pos_offset + r.max_new_tokens
+                    + eng.ecfg.K + 1)
+            if need > eng.ecfg.max_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt {r.prompt.size} + "
+                    f"max_new_tokens {r.max_new_tokens} (+K overshoot) "
+                    f"exceeds max_len {eng.ecfg.max_len}")
+        queue = deque(reqs)
+
+        state = eng.blank_state(rng)
+        active = np.zeros((B,), bool)
+        max_new = np.zeros((B,), np.int32)
+        slot_req: List[Optional[Request]] = [None] * B
+        finished: List[Request] = []
+        n_iters = 0
+
+        def finish(s: int):
+            req = slot_req[s]
+            req.status = FINISHED
+            req.t_finish = time.perf_counter()
+            active[s] = False
+            slot_req[s] = None
+            finished.append(req)
+            if self.free_on_finish:
+                nonlocal state
+                state = eng.free_slot(state, s)
+
+        def clip_and_check_done(req: Request) -> bool:
+            """Trim at EOS / budget; True when the request is complete."""
+            out = req.out_tokens
+            done = False
+            if self.eos_id is not None and self.eos_id in out:
+                del out[out.index(self.eos_id) + 1:]
+                done = True
+            if len(out) >= req.max_new_tokens:
+                del out[req.max_new_tokens:]     # speculative overshoot
+                done = True
+            return done
+
+        while queue or active.any():
+            # ---- admission: prefill queued requests into free slots -------
+            for s in range(B):
+                if active[s] or not queue:
+                    continue
+                req = queue.popleft()
+                req.status = PREFILLING
+                req.slot = s
+                req.t_admit = time.perf_counter()
+                state, first, last = eng.prefill_into_slot(
+                    state, req.prompt, s)
+                req.out_tokens.append(first)
+                req._prev_new, req._prev_last = 1, last
+                req.status = DECODING
+                slot_req[s] = req
+                active[s] = True
+                max_new[s] = req.max_new_tokens
+                if clip_and_check_done(req):     # EOS at the very first token
+                    finish(s)
+
+            if not active.any():
+                continue                         # everything died at prefill
+
+            # ---- speculative iterations over all live slots ---------------
+            # (several per sync when sync_every > 1 — jax pipelines the
+            # dispatches; budget freezes happen on device regardless)
+            act_dev, mn_dev = jnp.asarray(active), jnp.asarray(max_new)
+            for _ in range(self.sync_every):
+                state = eng.step(state, act_dev, mn_dev)
+                n_iters += 1
+            if n_iters > max_iters:
+                raise RuntimeError("scheduler exceeded max_iters")
+
+            # ---- sync: harvest newly committed tokens, retire slots -------
+            new_count = np.asarray(state["new_count"])
+            slot_iters = np.asarray(state["slot_iters"])
+            last = np.asarray(state["last"])
+            tokens = np.asarray(state["tokens"])
+            for s in range(B):
+                req = slot_req[s]
+                if req is None or not active[s]:
+                    continue
+                req.iters = int(slot_iters[s])   # device-exact (freeze-aware)
+                if new_count[s] > req._prev_new:
+                    req.out_tokens.extend(
+                        tokens[s, req._prev_last + 1:last[s] + 1].tolist())
+                    req._prev_new = int(new_count[s])
+                    req._prev_last = int(last[s])
+                if clip_and_check_done(req):
+                    finish(s)
+
+        wall = time.perf_counter() - t_start
+        return self._report(finished, wall, n_iters)
+
+    # ------------------------------------------------------------------
+    def _report(self, finished: List[Request], wall: float,
+                n_iters: int) -> Dict[str, Any]:
+        results = [{
+            "rid": r.rid,
+            "tokens": np.asarray(r.out_tokens, np.int32),
+            "n_new": len(r.out_tokens),
+            "iters": r.iters,
+            "acceptance_length": r.acceptance_length,
+            "wait_s": r.t_admit - r.t_submit,
+            "latency_s": r.t_finish - r.t_submit,
+        } for r in sorted(finished, key=lambda r: r.rid)]
+        total = sum(r["n_new"] for r in results)
+        return {
+            "results": results,
+            "n_requests": len(results),
+            "iterations": n_iters,
+            "total_new_tokens": total,
+            "wall_s": wall,
+            "otps": total / max(wall, 1e-9),
+            "mean_acceptance_length": float(np.mean(
+                [r["acceptance_length"] for r in results])) if results else 0.0,
+            "mean_latency_s": float(np.mean(
+                [r["latency_s"] for r in results])) if results else 0.0,
+        }
+
+
+def serve_round_based(engine: Engine, prompts: Sequence,
+                      budgets: Optional[Sequence[int]] = None,
+                      batch: Optional[int] = None) -> Dict[str, Any]:
+    """The pre-scheduler baseline (previously examples/serve_batched.py's
+    ``serve_queue``): fixed batch slots, queue refilled only *between* full
+    generation rounds — a finished row idles until the round's slowest member
+    drains. Honors per-request ``budgets`` (rows freeze on device at their
+    own max_new, like HF-generate-style static batching with early stop) so
+    benchmarks/table11_continuous.py compares the two disciplines on the
+    same workload."""
+    batch = batch or engine.batch
+    default = engine.ecfg.max_new_tokens
+    queue = [np.asarray(p, np.int32) for p in prompts]
+    buds = list(budgets) if budgets is not None else [default] * len(queue)
+    toks, rounds, al_num, al_den = 0, 0, 0, 0
+    t0 = time.perf_counter()
+    while queue:
+        cur, queue = queue[:batch], queue[batch:]
+        bud, buds = buds[:len(cur)], buds[len(cur):]
+        n_real = len(cur)
+        while len(cur) < batch:                  # pad final round
+            cur.append(cur[-1])
+            bud.append(0)                        # padded rows stay frozen
+        state = engine.prefill(jnp.stack(cur))
+        max_new = jnp.asarray(np.maximum(bud, 1), jnp.int32)
+        it = 0
+        while True:
+            state = engine.step(state, max_new=max_new)
+            it += 1
+            if it % 4 == 0 or it < 2:
+                nc = np.asarray(state["new_count"])
+                if (nc >= np.asarray(bud))[:n_real].all():
+                    break
+        nc = np.asarray(state["new_count"])[:n_real]
+        toks += int(np.minimum(nc, bud[:n_real]).sum())  # trim overshoot
+        al_num += int(np.asarray(state["committed"]))
+        al_den += max(int(np.asarray(state["row_iters"])), 1)
+        rounds += 1
+    wall = time.perf_counter() - t0
+    return {
+        "otps": toks / max(wall, 1e-9),
+        "total_new_tokens": toks,
+        "wall_s": wall,
+        "mean_acceptance_length": al_num / max(al_den, 1),
+        "rounds": rounds,
+    }

@@ -18,11 +18,17 @@ from jax.sharding import PartitionSpec as P
 AxisEntry = Union[None, str, Sequence[str]]
 
 
+# Legacy-jax fallback (no set_mesh/use_mesh/get_abstract_mesh, e.g. 0.4.x):
+# launch.steps.mesh_context pushes the concrete Mesh here; a concrete Mesh
+# exposes the same .empty/.axis_names/.shape surface the abstract mesh does.
+_FALLBACK_MESH: list = []
+
+
 def _current_mesh():
     try:
         mesh = jax.sharding.get_abstract_mesh()
     except Exception:
-        return None
+        mesh = _FALLBACK_MESH[-1] if _FALLBACK_MESH else None
     if mesh is None or mesh.empty or not mesh.axis_names:
         return None
     return mesh

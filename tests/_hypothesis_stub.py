@@ -1,0 +1,57 @@
+"""Minimal deterministic stand-in for ``hypothesis``.
+
+Installed by conftest.py (as ``sys.modules["hypothesis"]``) only when the
+real library is missing, so the property tests still *run* — against a fixed
+number of seeded random examples — instead of failing at collection. The
+repo's tests only use ``integers``/``floats`` strategies; anything fancier
+should use the real dependency (``pip install -e .[test]``).
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, int(max_value) + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def given(*strats, **kw_strats):
+    def deco(fn):
+        # no functools.wraps: __wrapped__ would make pytest introspect the
+        # original signature and demand fixtures named after the strategies
+        def wrapper():
+            n = getattr(wrapper, "_stub_max_examples", 20)
+            # per-test fixed seed: failures reproduce across runs
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = [s.draw(rng) for s in strats]
+                kw = {k: s.draw(rng) for k, s in kw_strats.items()}
+                fn(*drawn, **kw)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._stub_given = True
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = 20, **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco

@@ -13,8 +13,12 @@ KEY = jax.random.PRNGKey(0)
 TCFG = get_config("qwen2-1.5b").reduced()
 
 
-@pytest.mark.parametrize("variant", ["shared", "depth_encoding", "ntp_hidden",
-                                     "ntp_hidden_depth", "regularized"])
+@pytest.mark.parametrize("variant", [
+    "shared",                       # the paper's winner stays in the fast set
+    pytest.param("depth_encoding", marks=pytest.mark.slow),
+    pytest.param("ntp_hidden", marks=pytest.mark.slow),
+    pytest.param("ntp_hidden_depth", marks=pytest.mark.slow),
+    pytest.param("regularized", marks=pytest.mark.slow)])
 def test_variants_forward(variant):
     dcfg = DrafterConfig(n_layers=1, k_train=3,
                          hidden_state_variant=variant).resolve(TCFG)
@@ -38,6 +42,7 @@ def test_regularized_has_alpha():
     assert float(params["alpha"]) == pytest.approx(0.1)
 
 
+@pytest.mark.slow
 def test_freeze_embeddings_stops_gradient():
     from repro.core import losses
     for freeze in (True, False):

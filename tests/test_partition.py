@@ -4,6 +4,7 @@ unpartitioned gradient."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import DrafterConfig, get_config
@@ -44,6 +45,7 @@ def test_phase2_inheritance_matches_paper_example():
     assert A[i_d1] == 0              # position 7 -> segment 0 (bound 8)
 
 
+@pytest.mark.slow
 def test_segmented_grads_match_full():
     """Sum of per-segment gradients == unpartitioned gradient (each query
     appears in exactly one segment with its full attention context)."""

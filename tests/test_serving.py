@@ -3,6 +3,7 @@ invalidation + recurrent snapshot selection), max_new_tokens freezing."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import DrafterConfig, get_config
 from repro.core import drafter as D
@@ -47,6 +48,34 @@ def test_max_new_tokens_freezes_rows():
     assert (np.asarray(r["state"]["new_count"]) == 5).all()
     # no tokens written beyond the budget
     assert r["tokens"].shape[1] == 64
+
+
+@pytest.mark.parametrize("mode", ["parallel", "ar"])
+def test_engine_losslessness_greedy(mode):
+    """The engine docstring's core promise, asserted end-to-end: greedy
+    speculative decoding (either drafter mode, even an untrained drafter)
+    emits token-for-token what vanilla AR decoding emits."""
+    tcfg = get_config("qwen2-1.5b").reduced()
+    m = get_model(tcfg)
+    tparams = m.init(KEY)
+    dcfg = DrafterConfig(n_layers=1, k_infer=4).resolve(tcfg)
+    dparams = D.init_params(dcfg, tcfg, jax.random.fold_in(KEY, 3))
+    prompts = jax.random.randint(jax.random.fold_in(KEY, 4), (2, 5), 1,
+                                 tcfg.vocab_size - 2)
+    P, max_new = prompts.shape[1], 12
+
+    ref = Engine(tcfg, None, tparams, None,
+                 EngineConfig(K=0, max_new_tokens=max_new,
+                              drafter_mode="none", max_len=64), 2).run(prompts)
+    spec = Engine(tcfg, dcfg, tparams, dparams,
+                  EngineConfig(K=4, max_new_tokens=max_new,
+                               drafter_mode=mode, max_len=64), 2).run(prompts)
+    # spec commits whole accepted blocks and may overshoot the budget;
+    # the first max_new generated tokens must match exactly
+    np.testing.assert_array_equal(ref["tokens"][:, P:P + max_new],
+                                  spec["tokens"][:, P:P + max_new])
+    assert (np.asarray(ref["state"]["new_count"]) == max_new).all()
+    assert (np.asarray(spec["state"]["new_count"]) >= max_new).all()
 
 
 def test_acceptance_length_accounting():

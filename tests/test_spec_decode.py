@@ -54,8 +54,11 @@ def test_rejection_verify_lossless_distribution():
     np.testing.assert_allclose(emp, np.asarray(p), atol=0.015)
 
 
-@pytest.mark.parametrize("arch", ["qwen2-1.5b", "mamba2-780m",
-                                  "recurrentgemma-2b", "whisper-base"])
+@pytest.mark.parametrize("arch", [
+    "qwen2-1.5b",
+    pytest.param("mamba2-780m", marks=pytest.mark.slow),
+    pytest.param("recurrentgemma-2b", marks=pytest.mark.slow),
+    pytest.param("whisper-base", marks=pytest.mark.slow)])
 @pytest.mark.parametrize("mode", ["parallel", "ar"])
 def test_end_to_end_lossless(arch, mode):
     tcfg = get_config(arch).reduced()

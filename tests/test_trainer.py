@@ -22,6 +22,7 @@ def setup():
     return tcfg, m, tparams, corpus
 
 
+@pytest.mark.slow
 def test_parallel_loss_decreases(setup):
     tcfg, m, tparams, corpus = setup
     dcfg = DrafterConfig(n_layers=1, k_train=3).resolve(tcfg)
@@ -33,6 +34,7 @@ def test_parallel_loss_decreases(setup):
     assert last < 0.7 * first
 
 
+@pytest.mark.slow
 def test_segmented_trainer_runs_and_learns(setup):
     tcfg, m, tparams, corpus = setup
     dcfg = DrafterConfig(n_layers=1, k_train=3).resolve(tcfg)
@@ -43,6 +45,7 @@ def test_segmented_trainer_runs_and_learns(setup):
     assert log[-1]["loss"] < log[0]["loss"]
 
 
+@pytest.mark.slow
 def test_ar_ttt_baseline_trains(setup):
     tcfg, m, tparams, corpus = setup
     dcfg = DrafterConfig(n_layers=1, parallel=False, ttt_steps=2,
