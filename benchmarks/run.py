@@ -23,7 +23,7 @@ def main() -> None:
                             table3_hidden_state, table4_layers,
                             table5_embedding, table6_depth, table7_epochs,
                             table8_seqlen, table9_acceptance, table10_otps,
-                            table11_continuous, roofline)
+                            table11_continuous, table12_paged, roofline)
 
     epochs = 12 if args.quick else 22
     jobs = {
@@ -38,6 +38,7 @@ def main() -> None:
         "9": lambda: table9_acceptance.run(epochs=epochs),
         "10": lambda: table10_otps.run(epochs=epochs),
         "11": lambda: table11_continuous.run(epochs=epochs),
+        "12": lambda: table12_paged.run(epochs=epochs),
         "roofline": lambda: roofline.run(),
     }
     wanted = list(jobs) if args.tables == "all" else [

@@ -99,6 +99,26 @@ def main():
               f"{co_p / rb_p:9.2f}x {al_p:5.2f}   "
               f"(P/AR cont: {co_p / co_a:.2f}x, P/vanilla: {co_p / co0:.2f}x)")
 
+    # paged KV: same pool bytes as the contiguous engine's batch x max_len
+    # rows, but 2x the slots — the long-tail mix keeps more requests
+    # resident per byte (benchmarks/table12_paged.py quantifies this;
+    # losslessness across layouts is a test invariant)
+    paged = Engine(tcfg, dcfg_p, tparams, tr_p.dparams,
+                   EngineConfig(K=5, max_new_tokens=args.max_new,
+                                drafter_mode="parallel", max_len=128,
+                                kv_layout="paged", page_size=16,
+                                pool_pages=args.batch * 128 // 16),
+                   2 * args.batch)
+    pg = None
+    for _ in range(2):
+        reqs = [Request(p, max_new_tokens=b)
+                for p, b in zip(prompts, budgets)]
+        pg = Scheduler(paged, sync_every=args.sync_every).serve(reqs)
+    print(f"{'P-EAGLE paged':16s} {'—':>11s} {pg['otps']:11.1f} "
+          f"{'—':>10s} {pg['mean_acceptance_length']:5.2f}   "
+          f"({2 * args.batch} slots on {args.batch}-slot pool bytes, "
+          f"page_size=16)")
+
 
 if __name__ == "__main__":
     main()

@@ -8,6 +8,14 @@ against the resident (T, hd) query tile with online-softmax scratch.
 Cache slots carry absolute positions (-1 = empty) so ring (sliding-window)
 caches and speculative invalidation mask correctly — the same convention as
 models/layers.make_kv_cache.
+
+``paged_decode_attention`` is the paged-KV twin (serving/cache_ops paged
+layout): K/V live in a shared pool of fixed-size position pages and each
+batch row owns a block table. The page id is scalar-prefetched into the
+BlockSpec index map, so every grid step DMAs one page straight from the
+pool — the gather happens in the index stream, and the contiguous per-slot
+view the CPU path materializes (cache_ops.gather_state) never exists in
+HBM. Unallocated table entries (-1) are masked in-kernel.
 """
 from __future__ import annotations
 
@@ -102,4 +110,107 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         ],
         interpret=interpret,
     )(q_positions, k_positions, qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# paged-KV decode attention (block-table gather in the index stream)
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(bt_ref, qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale: float, window: int,
+                  n_pages: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)             # (T, hd)
+    k = k_ref[...].astype(jnp.float32)           # (page, hd)
+    v = v_ref[...].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qp = qpos_ref[0][:, None]                    # (T, 1)
+    kp = kpos_ref[...][None, :]                  # (1, page)
+    ok = (kp <= qp) & (kp >= 0)
+    if window > 0:
+        ok &= (qp - kp) < window
+    # unallocated page: the index map clamped it to page 0, whose positions
+    # could alias a *live* request's — mask the whole contribution
+    ok &= bt_ref[b, j] >= 0
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _done():
+        l = l_scr[...]
+        out = acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
+        out = jnp.where((l > 0)[:, None], out, 0.0)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, pos_pool: jax.Array,
+                           block_table: jax.Array, q_positions: jax.Array, *,
+                           scale: float, window: int = 0,
+                           interpret: bool = False) -> jax.Array:
+    """q (B,T,H,hd) small T; k_pool/v_pool (NP, page, KV, hd) shared page
+    pool; pos_pool (NP, page) int32 absolute positions (-1 = empty);
+    block_table (B, nb) int32 page ids (-1 = unallocated); q_positions
+    (B,T) int32. Each batch row attends only to the pages its table names —
+    one pool-resident page per grid step, no per-slot contiguous copy."""
+    B, T, H, hd = q.shape
+    NP, page, KV = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    nb = block_table.shape[1]
+    G = H // KV
+
+    qt = q.transpose(0, 2, 1, 3)                 # (B, H, T, hd)
+    grid = (B, H, nb)
+
+    def page_idx(b, h, j, bt):
+        return jnp.maximum(bt[b, j], 0)
+
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, T), lambda b, h, j, bt: (b, 0)),
+            pl.BlockSpec((None, page),
+                         lambda b, h, j, bt: (page_idx(b, h, j, bt), 0)),
+            pl.BlockSpec((1, None, T, hd), lambda b, h, j, bt: (b, h, 0, 0)),
+            pl.BlockSpec((None, page, None, hd),
+                         lambda b, h, j, bt, G=G:
+                         (page_idx(b, h, j, bt), 0, h // G, 0)),
+            pl.BlockSpec((None, page, None, hd),
+                         lambda b, h, j, bt, G=G:
+                         (page_idx(b, h, j, bt), 0, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, None, T, hd),
+                               lambda b, h, j, bt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((T,), jnp.float32),
+            pltpu.VMEM((T,), jnp.float32),
+            pltpu.VMEM((T, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, scale=scale, window=window,
+                          n_pages=nb),
+        grid_spec=gs,
+        out_shape=jax.ShapeDtypeStruct((B, H, T, hd), q.dtype),
+        interpret=interpret,
+    )(block_table, q_positions, pos_pool, qt, k_pool, v_pool)
     return out.transpose(0, 2, 1, 3)

@@ -75,3 +75,15 @@ def decode_attention(q, k, v, k_positions, q_positions, *, scale, window=0,
     return _dk.decode_attention(q, k2, v2, kp2, q_positions, scale=scale,
                                 window=window, block_k=bk,
                                 interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("scale", "window", "interpret"))
+def paged_decode_attention(q, k_pool, v_pool, pos_pool, block_table,
+                           q_positions, *, scale, window=0, interpret=None):
+    """Paged-KV decode: K/V in a (NP, page, KV, hd) pool, per-row
+    (B, nb) block tables (-1 = unallocated). The page is the DMA tile, so
+    no pad-to-block is needed — pool and tables are already page-granular."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _dk.paged_decode_attention(q, k_pool, v_pool, pos_pool,
+                                      block_table, q_positions, scale=scale,
+                                      window=window, interpret=interpret)

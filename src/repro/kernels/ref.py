@@ -54,6 +54,26 @@ def mtp_attention_reference(q, k, v, pos, depth, *, scale):
     return out.transpose(0, 3, 1, 2, 4).reshape(B, M, H, hd).astype(q.dtype)
 
 
+def paged_decode_reference(q, k_pool, v_pool, pos_pool, block_table,
+                           q_positions, *, scale, window=0):
+    """Oracle for the paged kernel: materialize each row's contiguous view
+    with a plain jnp gather (the cache_ops.gather_pages semantics — page 0
+    for unallocated entries, positions forced to -1) and run the dense
+    decode reference on it."""
+    page = k_pool.shape[1]
+    safe = jnp.clip(block_table, 0, None)                    # (B, nb)
+    B, nb = block_table.shape
+
+    def view(pool):
+        g = jnp.take(pool, safe, axis=0)                     # (B, nb, page, ...)
+        return g.reshape((B, nb * page) + pool.shape[2:])
+
+    kpos = view(pos_pool)
+    kpos = jnp.where(jnp.repeat(block_table < 0, page, axis=1), -1, kpos)
+    return decode_reference(q, view(k_pool), view(v_pool), kpos, q_positions,
+                            scale=scale, window=window)
+
+
 def decode_reference(q, k, v, k_positions, q_positions, *, scale, window=0):
     """Single-block decode: q (B,T,H,hd) vs cache k/v (B,S,KV,hd) with
     per-slot absolute positions (B,S) (-1 = empty) and query positions

@@ -41,6 +41,17 @@ def main():
                     help="speculative iterations between scheduler host syncs")
     ap.add_argument("--round-based", action="store_true",
                     help="also run the round-based baseline on the same queue")
+    ap.add_argument("--kv-layout", default="contiguous",
+                    choices=["contiguous", "paged"],
+                    help="paged = block-table KV pool; admission claims "
+                         "ceil(need/page) pages instead of a max_len row")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="positions per KV page (paged layout)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="page-pool size; 0 = batch * max_len/page_size")
+    ap.add_argument("--no-bucket", action="store_true",
+                    help="disable power-of-two bucketing of admission "
+                         "prefills (retraces per distinct prompt length)")
     args = ap.parse_args()
 
     reduced = args.reduced or jax.default_backend() != "tpu"
@@ -65,20 +76,37 @@ def main():
 
     eng = Engine(tcfg, dcfg, tparams, dparams,
                  EngineConfig(K=args.k, max_new_tokens=args.max_new,
-                              drafter_mode=args.mode, max_len=256),
+                              drafter_mode=args.mode, max_len=256,
+                              kv_layout=args.kv_layout,
+                              page_size=args.page_size,
+                              pool_pages=args.pool_pages,
+                              bucket_prefill=not args.no_bucket),
                  args.batch)
     rng = np.random.default_rng(3)
-    prompts = [rng.integers(0, tcfg.vocab_size - 2, size=8).astype(np.int32)
+    # varied prompt lengths exercise bucketed admission; the round-based
+    # baseline prefills whole batches, so give it equal lengths to compare
+    # the two disciplines on an identical workload
+    plen = (lambda: 8) if args.round_based or tcfg.family in (
+        "vlm", "encdec") else (lambda: int(rng.integers(4, 13)))
+    prompts = [rng.integers(0, tcfg.vocab_size - 2,
+                            size=plen()).astype(np.int32)
                for _ in range(args.requests)]
     budgets = rng.integers(max(args.max_new // 2, 1), args.max_new + 1,
                            size=args.requests).tolist()
 
     if tcfg.family in ("vlm", "encdec"):
+        if args.kv_layout == "paged":
+            raise SystemExit(
+                "--kv-layout paged needs the scheduler (per-slot admission "
+                "allocates pages), which cannot admit vlm/encdec targets "
+                "yet (ROADMAP: per-request extras plumbing)")
         # the scheduler can't admit per-request extras yet (ROADMAP item);
         # serve these families whole-batch like the pre-scheduler launcher
-        # (cycle prompts so the batch is full even when requests < batch)
+        # (cycle prompts so the batch is full even when requests < batch;
+        # whole-batch prefill needs equal lengths, so clip to the shortest)
+        plen = min(p.size for p in prompts)
         batch_prompts = jnp.stack(
-            [prompts[i % len(prompts)] for i in range(args.batch)])
+            [prompts[i % len(prompts)][:plen] for i in range(args.batch)])
         extras = make_extras(tcfg, args.batch, "prefill", key)
         r = eng.run(batch_prompts, extras)
         r = eng.run(batch_prompts, extras)   # steady-state timing
@@ -101,11 +129,24 @@ def main():
         print(f"  req {r['rid']:3d}: {r['n_new']:3d} tok in {r['iters']:3d} "
               f"iters  AL={r['acceptance_length']:.2f}  "
               f"latency={r['latency_s'] * 1e3:6.1f} ms")
+    if eng.paged:
+        print(f"paged KV: {eng.pool_pages} pages x {args.page_size} "
+              f"positions shared by {args.batch} slots "
+              f"({eng.allocator.n_free} free after drain)")
 
     if args.round_based:
+        rb_eng = eng
+        if eng.paged:
+            # the round-based baseline is a whole-batch loop (one contiguous
+            # state per round) — paged states are scheduler-only
+            rb_eng = Engine(tcfg, dcfg, tparams, dparams,
+                            EngineConfig(K=args.k,
+                                         max_new_tokens=args.max_new,
+                                         drafter_mode=args.mode, max_len=256),
+                            args.batch)
         rb = None
         for _ in range(2):      # same per-request budgets as the scheduler
-            rb = serve_round_based(eng, prompts, budgets)
+            rb = serve_round_based(rb_eng, prompts, budgets)
         print(f"round-based baseline: OTPS={rb['otps']:.1f} "
               f"({rb['rounds']} rounds) → continuous is "
               f"{rep['otps'] / max(rb['otps'], 1e-9):.2f}x")

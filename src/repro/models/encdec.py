@@ -149,7 +149,8 @@ def forward(cfg: ModelConfig, params: dict, tokens: Array, *,
             encoder_embeds: Optional[Array] = None,
             vision_embeds: Optional[Array] = None,
             collect_taps: bool = True,
-            head_last_only: bool = False) -> ModelOutput:
+            head_last_only: bool = False,
+            head_positions: Optional[Array] = None) -> ModelOutput:
     """Train/prefill require encoder_embeds (stub frontend output); prefill
     fills both the self cache and the per-layer cross K/V. Decode reads the
     cross K/V from the cache."""
@@ -195,7 +196,9 @@ def forward(cfg: ModelConfig, params: dict, tokens: Array, *,
             (params["dec_blocks"], cache["blocks"]))
         new_cache = {"blocks": nb}
 
-    if head_last_only:
+    if head_positions is not None:
+        x = jnp.take_along_axis(x, head_positions[:, None, None], axis=1)
+    elif head_last_only:
         # prefill only consumes the last position's logits; computing the
         # full (B, S, vocab) tensor wastes memory+collectives (§Perf iter 2)
         x = x[:, -1:]

@@ -218,7 +218,8 @@ def forward(cfg: ModelConfig, params: dict, tokens: Array, *,
             mode: str = "train",
             vision_embeds: Optional[Array] = None,
             collect_taps: bool = True,
-            head_last_only: bool = False) -> ModelOutput:
+            head_last_only: bool = False,
+            head_positions: Optional[Array] = None) -> ModelOutput:
     B, S = tokens.shape
     pat = _pattern(cfg)
     period = len(pat)
@@ -288,7 +289,9 @@ def forward(cfg: ModelConfig, params: dict, tokens: Array, *,
             if snapshots is not None:
                 snapshots["tail"] = stail
 
-    if head_last_only:
+    if head_positions is not None:
+        x = jnp.take_along_axis(x, head_positions[:, None, None], axis=1)
+    elif head_last_only:
         # prefill only consumes the last position's logits; computing the
         # full (B, S, vocab) tensor wastes memory+collectives (§Perf iter 2)
         x = x[:, -1:]

@@ -43,11 +43,12 @@ class Model:
 
     def forward(self, params: dict, tokens: Array, *, positions=None,
                 cache=None, mode: str = "train", collect_taps: bool = True,
-                head_last_only: bool = False,
+                head_last_only: bool = False, head_positions=None,
                 **extras) -> transformer.ModelOutput:
         kw: Dict[str, Any] = dict(positions=positions, cache=cache, mode=mode,
                                   collect_taps=collect_taps,
-                                  head_last_only=head_last_only)
+                                  head_last_only=head_last_only,
+                                  head_positions=head_positions)
         if self.cfg.family == "encdec":
             kw["encoder_embeds"] = extras.get("encoder_embeds")
         else:

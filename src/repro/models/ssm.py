@@ -223,7 +223,8 @@ def forward(cfg: ModelConfig, params: dict, tokens: Array, *,
             mode: str = "train",
             vision_embeds: Optional[Array] = None,
             collect_taps: bool = True,
-            head_last_only: bool = False) -> ModelOutput:
+            head_last_only: bool = False,
+            head_positions: Optional[Array] = None) -> ModelOutput:
     B, S = tokens.shape
     x = params["embed"][tokens]
     taps_idx = tap_layers(cfg.n_layers)
@@ -251,7 +252,9 @@ def forward(cfg: ModelConfig, params: dict, tokens: Array, *,
             (params["blocks"], cache["blocks"]))
         new_cache = {"blocks": nblocks}
 
-    if head_last_only:
+    if head_positions is not None:
+        x = jnp.take_along_axis(x, head_positions[:, None, None], axis=1)
+    elif head_last_only:
         # prefill only consumes the last position's logits; computing the
         # full (B, S, vocab) tensor wastes memory+collectives (§Perf iter 2)
         x = x[:, -1:]

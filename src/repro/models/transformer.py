@@ -258,10 +258,13 @@ def forward(cfg: ModelConfig, params: dict, tokens: Array, *,
             mode: str = "train",
             vision_embeds: Optional[Array] = None,
             collect_taps: bool = True,
-            head_last_only: bool = False) -> ModelOutput:
+            head_last_only: bool = False,
+            head_positions: Optional[Array] = None) -> ModelOutput:
     """tokens (B, S). For vlm train/prefill, vision_embeds (B, Tv, vision_dim)
     are projected and prepended (early fusion); logits cover the full fused
-    sequence."""
+    sequence. ``head_positions`` (B,) restricts the LM head to one gathered
+    sequence index per row (bucketed prefill: the true last prompt position
+    inside a padded bucket), like ``head_last_only`` does for index -1."""
     B = tokens.shape[0]
     x = params["embed"][tokens]
     if cfg.embed_scale:
@@ -344,7 +347,9 @@ def forward(cfg: ModelConfig, params: dict, tokens: Array, *,
         if new_cache is not None:
             new_cache["tail"] = ntail
 
-    if head_last_only:
+    if head_positions is not None:
+        x = jnp.take_along_axis(x, head_positions[:, None, None], axis=1)
+    elif head_last_only:
         # prefill only consumes the last position's logits; computing the
         # full (B, S, vocab) tensor wastes memory+collectives (§Perf iter 2)
         x = x[:, -1:]

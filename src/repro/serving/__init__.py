@@ -1,6 +1,7 @@
 from repro.serving.engine import Engine, EngineConfig
 from repro.serving.scheduler import Request, Scheduler, serve_round_based
 from repro.serving import cache_ops
+from repro.serving.cache_ops import BlockAllocator
 
-__all__ = ["Engine", "EngineConfig", "Request", "Scheduler",
-           "serve_round_based", "cache_ops"]
+__all__ = ["BlockAllocator", "Engine", "EngineConfig", "Request",
+           "Scheduler", "serve_round_based", "cache_ops"]

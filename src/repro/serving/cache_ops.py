@@ -15,10 +15,35 @@ victim slot of the running state. The batch axis of each leaf is inferred
 structurally — by diffing abstract evaluations of the same state at two batch
 sizes — so the machinery is agnostic to cache layout (stacked super-block
 KV, ring buffers, recurrent snapshots, drafter caches alike).
+
+Paged (block) KV layout
+-----------------------
+``paged_state`` / ``gather_state`` / ``scatter_state`` / ``admit_pages``
+re-express every *full-length* attention KV cache (a sub-dict with
+``k/v/positions/ring`` whose window equals ``max_len``) as a **shared pool of
+fixed-size position pages** plus a per-slot block table:
+
+    contiguous   k (..., B, max_len, KV, hd)
+    paged        k (..., n_pool_pages, page, KV, hd)   + table (B, max_len/page)
+
+Pages are the allocation unit (``BlockAllocator``): admission claims
+``ceil(need/page)`` pages instead of a full max-length row, EOS returns them,
+and a pool of fixed byte size holds as many *requests* as their actual
+lengths — not their worst case — allow. Ring (sliding-window) caches and
+recurrent leaves (SSM state, conv windows, RG-LRU h) are already
+memory-bounded per slot and stay in per-slot rows.
+
+The decode step runs unchanged on a *gathered view*: ``gather_state``
+reassembles each slot's pages into the contiguous per-slot layout the model
+forward expects (the CPU twin of the paged Pallas gather in
+kernels/decode_attention.py, which reads pages through the block table
+without materializing the view), and ``scatter_state`` writes the updated
+view back through the table — so speculative rollback-invalidation and
+recurrent snapshot commit work bit-identically across layouts.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +51,11 @@ import jax.numpy as jnp
 Array = jax.Array
 _SNAP_LEAVES = ("state", "conv", "h")
 NO_BATCH = -1          # batch_axes sentinel: leaf has no batch dimension
+
+# paged-spec leaf tags (structure-matched int pytree over a decode state)
+NOT_PAGED = 0          # per-slot leaf: handled by write_slot/reset_slot
+PAGED_KV = 1           # k/v pool leaf: pages on axis -4
+PAGED_POS = 2          # positions pool leaf: pages on axis -2
 
 
 def _path_str(path) -> str:
@@ -117,3 +147,193 @@ def reset_slot(tree, slot: Array, axes, fills: Optional[dict] = None):
         return jax.lax.dynamic_update_slice_in_dim(d, row, slot, axis=ax)
 
     return jax.tree_util.tree_map_with_path(r, tree, axes)
+
+
+# ---------------------------------------------------------------------------
+# paged (block) KV layout
+# ---------------------------------------------------------------------------
+
+class BlockAllocator:
+    """Host-side free-list allocator over a fixed pool of KV pages.
+
+    ``alloc(n)`` pops n page ids (returns None — allocating nothing — when
+    the pool can't satisfy the request, so admission can simply wait);
+    ``free(pages)`` returns them. Double-free and foreign ids raise: leaked
+    or aliased pages corrupt neighbouring requests silently, so the
+    allocator is the loud line of defense."""
+
+    def __init__(self, n_pages: int):
+        if n_pages <= 0:
+            raise ValueError(f"need a positive pool, got {n_pages}")
+        self.n_pages = n_pages
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self._used: set = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return len(self._used)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._used.update(pages)
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if p not in self._used:
+                raise ValueError(f"free of page {p} not currently allocated")
+            self._used.remove(p)
+            self._free.append(p)
+
+
+def _is_paged_dict(d: dict, max_len: int) -> bool:
+    """A pageable KV cache: the make_kv_cache contract (k/v/positions/ring)
+    at full length. Ring caches (positions window < max_len) are already
+    memory-bounded and stay per-slot; so do recurrent leaves and the encdec
+    cross K/V (no positions leaf)."""
+    if not (isinstance(d, dict)
+            and {"k", "v", "positions", "ring"} <= set(d.keys())):
+        return False
+    return d["positions"].shape[-1] == max_len
+
+
+def has_ring_cache(cache_tree, max_len: int) -> bool:
+    """Whether any attention KV cache in the tree is a ring (sliding-window)
+    buffer — positions window shorter than max_len. Ring caches wrap on
+    write (slot = pos % W), so right-padding a prefill past the window
+    would evict live prompt entries; callers must chunk instead of pad."""
+    found = False
+
+    def walk(node):
+        nonlocal found
+        if isinstance(node, dict):
+            if {"k", "v", "positions", "ring"} <= set(node.keys()):
+                found |= node["positions"].shape[-1] != max_len
+                return
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(cache_tree)
+    return found
+
+
+def paged_spec(cache_tree, max_len: int):
+    """Structure-matched int pytree tagging each leaf of a decode-state (or
+    cache) subtree: PAGED_KV / PAGED_POS for pool leaves, NOT_PAGED
+    otherwise. Computed from the *contiguous* template; the same spec
+    addresses both layouts since paging preserves tree structure."""
+    def walk(node):
+        if isinstance(node, dict):
+            if _is_paged_dict(node, max_len):
+                return {k: (PAGED_KV if k in ("k", "v")
+                            else PAGED_POS if k == "positions"
+                            else NOT_PAGED) for k in node}
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return NOT_PAGED
+    return walk(cache_tree)
+
+
+def _page_axis(tag: int) -> int:
+    # pool page axis: k/v (..., NP, page, KV, hd) → -4; positions (..., NP,
+    # page) → -2. Same offsets index the (B, W) axes of the contiguous view.
+    return -4 if tag == PAGED_KV else -2
+
+
+def paged_pool(leaf, tag: int, page: int, n_pool_pages: int):
+    """Pool counterpart of one contiguous cache leaf: the (B, W) axes become
+    (n_pool_pages, page), leading stack axes are preserved. positions init
+    to -1 (empty), K/V to zero."""
+    ax = _page_axis(tag)
+    stack = leaf.shape[:leaf.ndim + ax]             # dims before (B, W)
+    tail = leaf.shape[leaf.ndim + ax + 2:]
+    shape = stack + (n_pool_pages, page) + tail
+    fill = -1 if tag == PAGED_POS else 0
+    return jnp.full(shape, fill, leaf.dtype)
+
+
+def paged_state(state_tree, spec, page: int, n_pool_pages: int):
+    """Rebuild a contiguous decode state with every paged leaf replaced by
+    its pool. Non-paged leaves are kept as-is (same objects)."""
+    return jax.tree.map(
+        lambda leaf, tag: leaf if tag == NOT_PAGED
+        else paged_pool(leaf, tag, page, n_pool_pages), state_tree, spec)
+
+
+def gather_pages(pool, table: Array, tag: int):
+    """pool (..., NP, page, ...) + table (B, nb) → contiguous view
+    (..., B, nb*page, ...). Unallocated table entries (-1) read page 0 but
+    their positions are forced to -1, so the view region is *empty* — K/V
+    garbage under an empty position is masked by every attention path."""
+    ax = _page_axis(tag)
+    nd = pool.ndim
+    B, nb = table.shape
+    view = jnp.take(pool, jnp.clip(table, 0, None), axis=nd + ax)
+    # (..., B, nb, page, ...) → merge (nb, page)
+    shape = (view.shape[:nd + ax] + (B, nb * pool.shape[nd + ax + 1])
+             + view.shape[nd + ax + 3:])
+    view = view.reshape(shape)
+    if tag == PAGED_POS:
+        invalid = jnp.repeat(table < 0, pool.shape[-1], axis=1)   # (B, W)
+        view = jnp.where(invalid, -1, view)
+    return view
+
+
+def scatter_pages(pool, view, table: Array, tag: int):
+    """Inverse of gather_pages: write the per-slot view back through the
+    block table. Rows of unallocated pages (table -1) are dropped (their
+    index is forced out of range). Indexing stays on the native page axis —
+    no transposes, so XLA lowers a single scatter."""
+    ax = pool.ndim + _page_axis(tag)             # absolute page axis
+    B, nb = table.shape
+    page = pool.shape[ax + 1]
+    blocks = view.reshape(view.shape[:ax] + (B * nb, page)
+                          + view.shape[ax + 2:])
+    idx = jnp.where(table < 0, pool.shape[ax], table).reshape(-1)
+    sl = (slice(None),) * ax + (idx,)
+    return pool.at[sl].set(blocks.astype(pool.dtype), mode="drop")
+
+
+def gather_state(pstate, table: Array, spec):
+    """Paged decode state → contiguous per-slot view (non-paged leaves pass
+    through untouched)."""
+    return jax.tree.map(
+        lambda leaf, tag: leaf if tag == NOT_PAGED
+        else gather_pages(leaf, table, tag), pstate, spec)
+
+
+def scatter_state(pstate, view_state, table: Array, spec):
+    """Contiguous view (post-step) → paged state: paged leaves scatter into
+    their pools, everything else takes the stepped view value."""
+    return jax.tree.map(
+        lambda pool, view, tag: view if tag == NOT_PAGED
+        else scatter_pages(pool, view, table, tag), pstate, view_state, spec)
+
+
+def admit_pages(pstate, src, slot: Array, table_row: Array, axes, spec):
+    """Admit a batch-1 contiguous state ``src`` into a paged state: per-slot
+    leaves go through ``write_slot`` (pool leaves have no batch axis in the
+    paged layout, so the inferred ``axes`` skip them automatically), paged
+    leaves scatter src row 0 into the pages of ``table_row`` (nb,)."""
+    out = write_slot(pstate, src, slot, axes)
+
+    def admit(pool, s, tag):
+        if tag == NOT_PAGED:
+            return pool
+        return scatter_pages(pool, jax.lax.index_in_dim(
+            s, 0, axis=s.ndim + _page_axis(tag), keepdims=True),
+            table_row[None], tag)
+
+    return jax.tree.map(admit, out, src, spec)

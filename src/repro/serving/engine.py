@@ -42,6 +42,23 @@ class EngineConfig:
     drafter_mode: str = "parallel"   # parallel | ar | none
     cache_dtype: str = "float32"     # bfloat16 on accelerators
     max_len: int = 512               # total positions per slot
+    # --- KV layout -------------------------------------------------------
+    # "contiguous": every slot owns a max_len cache row (the baseline).
+    # "paged": full-length attention KV lives in a shared pool of fixed-size
+    # position pages behind per-slot block tables (cache_ops); admission
+    # allocates ceil(need/page_size) pages instead of a max_len row.
+    kv_layout: str = "contiguous"
+    page_size: int = 16              # positions per page (paged layout)
+    pool_pages: int = 0              # pool size; 0 = batch * max_len/page_size
+    # Power-of-two bucketing for per-slot admission prefills, so a stream of
+    # distinct prompt lengths compiles O(log2 max_len) traces instead of one
+    # per length. Append-only attention families right-pad to the bucket
+    # (pads are causally inert; their cache entries are invalidated);
+    # recurrent families (ssm/hybrid) and targets with ring sliding-window
+    # KV — where pads would corrupt the recurrence / wrap over live window
+    # entries — split the prompt into its MSB-first power-of-two chunks.
+    # Exactness across both paths is pinned by the cross-layout tests.
+    bucket_prefill: bool = True
 
 
 def make_decode_state(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
@@ -83,12 +100,32 @@ class Engine:
         self.model = get_model(tcfg)
         self.pos_offset = (tcfg.vision_tokens
                            if tcfg.family == "vlm" else 0)
+        if ecfg.kv_layout not in ("contiguous", "paged"):
+            raise ValueError(f"unknown kv_layout {ecfg.kv_layout!r}")
+        self.paged = ecfg.kv_layout == "paged"
+        if self.paged:
+            if ecfg.max_len % ecfg.page_size:
+                raise ValueError(
+                    f"max_len {ecfg.max_len} must be a multiple of "
+                    f"page_size {ecfg.page_size}")
+            self.pages_per_slot = ecfg.max_len // ecfg.page_size
+            self.pool_pages = ecfg.pool_pages or batch * self.pages_per_slot
+            self.allocator = cache_ops.BlockAllocator(self.pool_pages)
+            self._slot_pages: List[List[int]] = [[] for _ in range(batch)]
         self._step = jax.jit(self._step_impl)
         self._prefill = jax.jit(self._prefill_impl)
+        self._prefill_pad = jax.jit(self._prefill_pad_impl)
+        self._chunk = jax.jit(self._chunk_impl)
         self._sched_step = jax.jit(self._sched_step_impl)
+        self._paged_step = jax.jit(self._paged_step_impl)
         self._admit = jax.jit(self._admit_impl)
+        self._paged_admit = jax.jit(self._paged_admit_impl)
         self._free = jax.jit(self._free_impl)
+        self._paged_free = jax.jit(self._paged_free_impl)
         self._slot_axes = None
+        self._paged_axes = None
+        self._pspec = None
+        self._pad_unsafe = None
 
     # ------------------------------------------------------------------
     # prefill
@@ -132,6 +169,139 @@ class Engine:
                              else jax.random.PRNGKey(0))
 
     # ------------------------------------------------------------------
+    # bucketed admission prefill (one trace per power-of-two bucket)
+    # ------------------------------------------------------------------
+    def _prefill_pad_impl(self, tparams, dparams, prompts, true_len, extras,
+                          rng):
+        """Attention-family bucketed prefill: ``prompts`` (B, Pb) is the
+        prompt right-padded to a power-of-two bucket, ``true_len`` the traced
+        real length. Causal attention makes right-pads inert for every real
+        position; the pads' cache entries are invalidated afterwards (same
+        position-based mechanism as speculative rollback), and logits/taps
+        are gathered at the true last position instead of -1."""
+        B, Pb = prompts.shape
+        state = make_decode_state(self.model, self.tcfg, self.dcfg,
+                                  self.ecfg, B, rng=rng)
+        fused = true_len + self.pos_offset       # positions 0..fused-1 real
+        hp = jnp.broadcast_to(fused - 1, (B,)).astype(jnp.int32)
+        out = self.model.forward(tparams, prompts, mode="prefill",
+                                 cache=state["tcache"], collect_taps=True,
+                                 head_positions=hp, **extras)
+        first = jnp.argmax(out.logits[:, 0], axis=-1).astype(jnp.int32)
+        taps_last = jnp.take_along_axis(out.taps, hp[:, None, None],
+                                        axis=1)[:, 0]
+
+        tokens = state["tokens"]
+        tokens = tokens.at[:, self.pos_offset:self.pos_offset + Pb].set(
+            prompts)
+        tokens = tokens.at[jnp.arange(B), fused].set(first)
+
+        cp = jnp.broadcast_to(fused - 1, (B,))
+        zero = jnp.zeros((B,), jnp.int32)
+        state.update(
+            tokens=tokens,
+            last=jnp.broadcast_to(fused, (B,)).astype(jnp.int32),
+            taps_last=taps_last,
+            tcache=cache_ops.commit(out.cache, None, cp, zero),
+        )
+        if self.ecfg.drafter_mode != "none":
+            dcache = state["dcache"]
+            if Pb > 1:
+                pos = (jnp.arange(Pb - 1, dtype=jnp.int32)[None]
+                       + self.pos_offset)
+                pos = jnp.broadcast_to(pos, (B, Pb - 1))
+                dcache = D.extend(self.dcfg, self.tcfg, dparams, dcache,
+                                  prompts[:, 1:], out.taps[:, -Pb:-1], pos)
+                # pad pairs wrote drafter positions beyond the real prompt
+                dcache = cache_ops.commit(dcache, None, cp - 1, zero)
+            state["dcache"] = dcache
+        return state
+
+    def _chunk_impl(self, tparams, dparams, state, chunk, start):
+        """Recurrent-family bucketed prefill step: feed ``chunk`` (B, c) of
+        the prompt through a decode-mode forward at positions ``start..``.
+        Exact for SSM/RG-LRU state (pads would corrupt the recurrence, so
+        chunking replaces padding); each chunk size is a power of two, so a
+        length-P prompt costs popcount(P) cached traces."""
+        B, c = chunk.shape
+        off = self.pos_offset
+        positions = jnp.broadcast_to(
+            (start + off + jnp.arange(c, dtype=jnp.int32))[None], (B, c))
+        out = self.model.forward(tparams, chunk, mode="decode",
+                                 positions=positions, cache=state["tcache"],
+                                 collect_taps=True, head_last_only=True)
+        first = jnp.argmax(out.logits[:, -1], axis=-1).astype(jnp.int32)
+        fused = start + off + c
+        tokens = jax.lax.dynamic_update_slice(state["tokens"], chunk,
+                                              (0, start + off))
+        tokens = tokens.at[jnp.arange(B), fused].set(first)
+        new = dict(state)
+        new.update(
+            tokens=tokens,
+            last=jnp.broadcast_to(fused, (B,)).astype(jnp.int32),
+            taps_last=out.taps[:, -1],
+            tcache=out.cache,
+        )
+        if self.ecfg.drafter_mode != "none":
+            # drafter pair at position p pairs (taps[p], token[p+1]): the
+            # chunk supplies tokens start..start+c-1, so taps come from the
+            # previous chunk's last tap followed by this chunk's first c-1
+            taps = jnp.concatenate([state["taps_last"][:, None],
+                                    out.taps[:, :-1]], axis=1)
+            dpos = jnp.broadcast_to(
+                (start - 1 + off + jnp.arange(c, dtype=jnp.int32))[None],
+                (B, c))
+            new["dcache"] = D.extend(self.dcfg, self.tcfg, dparams,
+                                     state["dcache"], chunk, taps, dpos)
+        return new
+
+    @staticmethod
+    def prefill_buckets(length: int) -> List[int]:
+        """MSB-first power-of-two decomposition of a prompt length — the
+        chunk sizes of a bucketed recurrent-family prefill. (Attention
+        families instead right-pad to the next power of two: one forward.)"""
+        return [1 << b for b in range(length.bit_length() - 1, -1, -1)
+                if length >> b & 1]
+
+    def _chunk_only(self) -> bool:
+        """Bucketing strategy: padding is only sound when every cache
+        position is append-only. Recurrent state (ssm/hybrid) would fold the
+        pads into the recurrence, and ring (sliding-window) KV wraps on
+        write — a pad past the window evicts live prompt entries — so both
+        take the MSB-chunking path; pure append-only attention pads."""
+        if self._pad_unsafe is None:
+            tpl = jax.eval_shape(
+                self._prefill_impl, self.tparams, self.dparams,
+                jax.ShapeDtypeStruct((1, 4), jnp.int32), {},
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+            self._pad_unsafe = (
+                self.tcfg.family in ("ssm", "hybrid")
+                or cache_ops.has_ring_cache(tpl["tcache"], self.ecfg.max_len))
+        return self._pad_unsafe
+
+    def _admission_prefill(self, prompt, extras, rng):
+        """Batch-1 prefill for slot admission, bucketed per EngineConfig."""
+        P = int(prompt.shape[1])
+        if not self.ecfg.bucket_prefill:
+            return self._prefill(self.tparams, self.dparams, prompt, extras,
+                                 rng)
+        if self._chunk_only():
+            sizes = self.prefill_buckets(P)
+            state = self._prefill(self.tparams, self.dparams,
+                                  prompt[:, :sizes[0]], extras, rng)
+            start = sizes[0]
+            for c in sizes[1:]:
+                state = self._chunk(self.tparams, self.dparams, state,
+                                    prompt[:, start:start + c],
+                                    jnp.asarray(start, jnp.int32))
+                start += c
+            return state
+        Pb = 1 << max(P - 1, 0).bit_length()     # next power of two >= P
+        padded = jnp.pad(prompt, ((0, 0), (0, Pb - P)))
+        return self._prefill_pad(self.tparams, self.dparams, padded,
+                                 jnp.asarray(P, jnp.int32), extras, rng)
+
+    # ------------------------------------------------------------------
     # one speculative iteration
     # ------------------------------------------------------------------
     def _step_impl(self, tparams, dparams, state):
@@ -155,34 +325,114 @@ class Engine:
             self._slot_axes = cache_ops.batch_axes(pf(1), pf(2))
         return self._slot_axes
 
+    @property
+    def pspec(self):
+        """Paged-layout leaf tags (cache_ops.paged_spec) over the decode
+        state: which leaves live in the page pool vs per-slot rows."""
+        if self._pspec is None:
+            tpl = jax.eval_shape(
+                self._prefill_impl, self.tparams, self.dparams,
+                jax.ShapeDtypeStruct((self.batch, 4), jnp.int32), {},
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+            self._pspec = cache_ops.paged_spec(tpl, self.ecfg.max_len)
+        return self._pspec
+
+    @property
+    def paged_axes(self):
+        """batch_axes of the *paged* state: pool leaves have no batch axis,
+        so write_slot/reset_slot skip them automatically and only touch
+        per-slot rows."""
+        if self._paged_axes is None:
+            def blank(b):
+                return jax.eval_shape(lambda: cache_ops.paged_state(
+                    make_decode_state(self.model, self.tcfg, self.dcfg,
+                                      self.ecfg, b),
+                    self.pspec, self.ecfg.page_size, self.pool_pages))
+            self._paged_axes = cache_ops.batch_axes(blank(1), blank(2))
+        return self._paged_axes
+
     def blank_state(self, rng: Optional[Array] = None) -> dict:
         """An all-idle batch state: empty caches (positions -1), zero tokens,
         every slot frozen (new_count == max_new_tokens so the budget check
-        keeps it inert). Slots come alive via ``prefill_into_slot``."""
+        keeps it inert). Slots come alive via ``prefill_into_slot``. In the
+        paged layout, full-length KV leaves are page pools and the state
+        carries a per-slot ``block_table`` (B, max_len/page_size), all -1."""
         sds = jax.eval_shape(
             self._prefill_impl, self.tparams, self.dparams,
             jax.ShapeDtypeStruct((self.batch, 4), jnp.int32), {},
             jax.ShapeDtypeStruct((2,), jnp.uint32))
-        return make_decode_state(
+        state = make_decode_state(
             self.model, self.tcfg, self.dcfg, self.ecfg, self.batch,
             taps_dtype=sds["taps_last"].dtype,
             new_count_fill=self.ecfg.max_new_tokens, rng=rng)
+        if self.paged:
+            state = cache_ops.paged_state(state, self.pspec,
+                                          self.ecfg.page_size,
+                                          self.pool_pages)
+            state["block_table"] = jnp.full(
+                (self.batch, self.pages_per_slot), -1, jnp.int32)
+        return state
+
+    def pages_needed(self, prompt_len: int,
+                     max_new: Optional[int] = None) -> int:
+        """KV pages one request occupies for its whole lifetime: prompt +
+        budget + worst-case speculative overshoot, in page units."""
+        if not self.paged:
+            return 0
+        budget = self.ecfg.max_new_tokens if max_new is None else max_new
+        need = min(prompt_len + self.pos_offset + budget + self.ecfg.K + 1,
+                   self.ecfg.max_len)
+        return -(-need // self.ecfg.page_size)
+
+    def can_admit(self, prompt_len: int,
+                  max_new: Optional[int] = None) -> bool:
+        """Whether the pool can hold one more request of this shape right
+        now (always True for the contiguous layout — a free slot is a free
+        max_len row)."""
+        return (not self.paged
+                or self.pages_needed(prompt_len, max_new)
+                <= self.allocator.n_free)
 
     def prefill_into_slot(self, state: dict, prompt, slot: int,
                           extras: Optional[dict] = None,
-                          rng: Optional[Array] = None):
+                          rng: Optional[Array] = None,
+                          max_new: Optional[int] = None):
         """Admit one request into batch row ``slot`` of a live state: prefill
-        the prompt as a batch-1 state, then scatter every batched leaf's row
-        into the slot (cache_ops.write_slot). Neighbor slots are untouched —
-        rows are independent through attention, caches, and verification, so
+        the prompt as a batch-1 state (bucketed to power-of-two lengths when
+        ``bucket_prefill``), then scatter every batched leaf's row into the
+        slot (cache_ops.write_slot). Neighbor slots are untouched — rows are
+        independent through attention, caches, and verification, so
         mid-stream admission cannot perturb already-decoding requests.
+
+        In the paged layout the slot additionally claims
+        ``pages_needed(len(prompt), max_new)`` pages from the pool (callers
+        gate on ``can_admit``) and the prefilled KV is scattered into those
+        pages instead of a contiguous row.
 
         Returns (new_state, first_token, last_pos): the prefill already
         commits one token (new_count starts at 1 for the slot)."""
         prompt = jnp.asarray(prompt, jnp.int32)[None]
-        src = self._prefill(self.tparams, self.dparams, prompt, extras or {},
-                            rng if rng is not None else jax.random.PRNGKey(0))
-        state = self._admit(state, src, jnp.asarray(slot, jnp.int32))
+        src = self._admission_prefill(prompt, extras or {},
+                                      rng if rng is not None
+                                      else jax.random.PRNGKey(0))
+        if not self.paged:
+            state = self._admit(state, src, jnp.asarray(slot, jnp.int32))
+        else:
+            if self._slot_pages[slot]:
+                raise RuntimeError(f"slot {slot} still holds pages; "
+                                   "free_slot it before re-admission")
+            n = self.pages_needed(int(prompt.shape[1]), max_new)
+            pages = self.allocator.alloc(n)
+            if pages is None:
+                raise RuntimeError(
+                    f"page pool exhausted ({n} needed, "
+                    f"{self.allocator.n_free} free); gate on can_admit")
+            self._slot_pages[slot] = pages
+            row = np.full((self.pages_per_slot,), -1, np.int32)
+            row[:n] = pages
+            state = self._paged_admit(state, src,
+                                      jnp.asarray(slot, jnp.int32),
+                                      jnp.asarray(row))
         last = int(src["last"][0])
         first = int(src["tokens"][0, last])
         return state, first, last
@@ -190,11 +440,23 @@ class Engine:
     def _admit_impl(self, dst, src, slot):
         return cache_ops.write_slot(dst, src, slot, self.slot_axes)
 
+    def _paged_admit_impl(self, dst, src, slot, row):
+        core = {k: v for k, v in dst.items() if k != "block_table"}
+        core = cache_ops.admit_pages(core, src, slot, row, self.paged_axes,
+                                     self.pspec)
+        core["block_table"] = dst["block_table"].at[slot].set(row)
+        return core
+
     def free_slot(self, state: dict, slot: int) -> dict:
-        """Reset one slot's cache/token/taps rows to blank (positions -1) and
+        """Reset one slot's per-slot rows to blank (positions -1) and
         refreeze it (new_count = max_new_tokens) so it idles until the next
-        admission. Functionally optional — an inactive slot's garbage is fully
-        overwritten on admit — but keeps freed rows inert and cheap to audit."""
+        admission. In the paged layout this also returns the slot's pages to
+        the pool and blanks its block-table row — mandatory there, or the
+        pool leaks; cosmetic for contiguous (admission fully overwrites)."""
+        if self.paged:
+            self.allocator.free(self._slot_pages[slot])
+            self._slot_pages[slot] = []
+            return self._paged_free(state, jnp.asarray(slot, jnp.int32))
         return self._free(state, jnp.asarray(slot, jnp.int32))
 
     def _free_impl(self, state, slot):
@@ -202,11 +464,36 @@ class Engine:
             state, slot, self.slot_axes,
             fills={"new_count": self.ecfg.max_new_tokens})
 
+    def _paged_free_impl(self, state, slot):
+        core = {k: v for k, v in state.items() if k != "block_table"}
+        core = cache_ops.reset_slot(
+            core, slot, self.paged_axes,
+            fills={"new_count": self.ecfg.max_new_tokens})
+        core["block_table"] = state["block_table"].at[slot].set(
+            jnp.full((self.pages_per_slot,), -1, jnp.int32))
+        return core
+
     def step(self, state: dict, active: Optional[Array] = None,
              max_new: Optional[Array] = None) -> dict:
         """One jitted speculative iteration. Without arguments this is the
         legacy whole-batch step; the scheduler passes ``active`` (B,) bool and
-        per-slot ``max_new`` (B,) int32."""
+        per-slot ``max_new`` (B,) int32. The paged layout always routes
+        through the gather→step→scatter wrapper."""
+        if self.paged:
+            if "block_table" not in state:
+                raise ValueError(
+                    "paged Engine.step needs a paged state (blank_state + "
+                    "prefill_into_slot); whole-batch prefill states are "
+                    "contiguous-only — use a kv_layout='contiguous' engine "
+                    "for whole-batch loops like serve_round_based")
+            B = state["tokens"].shape[0]
+            if active is None:
+                active = jnp.ones((B,), bool)
+            if max_new is None:
+                max_new = jnp.full((B,), self.ecfg.max_new_tokens, jnp.int32)
+            return self._paged_step(self.tparams, self.dparams, state,
+                                    jnp.asarray(active),
+                                    jnp.asarray(max_new, jnp.int32))
         if active is None and max_new is None:
             return self._step(self.tparams, self.dparams, state)
         B = state["tokens"].shape[0]
@@ -223,11 +510,33 @@ class Engine:
                                 tparams, dparams, state,
                                 active_mask=active, max_new=max_new)
 
+    def _paged_step_impl(self, tparams, dparams, state, active, max_new):
+        """Paged twin of _sched_step_impl: reassemble each slot's pages into
+        the contiguous per-slot view the step consumes (cache_ops.gather),
+        run the identical speculative iteration, scatter the updated view
+        back through the block table. All inside one jit, so rollback
+        invalidation and snapshot commit are bit-identical across layouts —
+        the cross-layout equivalence tests pin this."""
+        table = state["block_table"]
+        core = {k: v for k, v in state.items() if k != "block_table"}
+        view = cache_ops.gather_state(core, table, self.pspec)
+        view = speculative_step(self.model, self.tcfg, self.dcfg, self.ecfg,
+                                tparams, dparams, view,
+                                active_mask=active, max_new=max_new)
+        core = cache_ops.scatter_state(core, view, table, self.pspec)
+        core["block_table"] = table
+        return core
+
     # ------------------------------------------------------------------
     # loops & metrics
     # ------------------------------------------------------------------
     def run(self, prompts: Array, extras: Optional[dict] = None,
             max_iters: int = 10_000) -> Dict[str, Any]:
+        if self.paged:
+            raise ValueError(
+                "Engine.run is the whole-batch contiguous loop; drive a "
+                "paged engine through serving.Scheduler (per-slot admission "
+                "is what allocates pages)")
         t0 = time.perf_counter()
         state = self.prefill(prompts, extras)
         jax.block_until_ready(state["tokens"])

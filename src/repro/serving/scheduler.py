@@ -147,6 +147,13 @@ class Scheduler:
                     f"request {r.rid}: prompt {r.prompt.size} + "
                     f"max_new_tokens {r.max_new_tokens} (+K overshoot) "
                     f"exceeds max_len {eng.ecfg.max_len}")
+            if eng.paged:
+                n = eng.pages_needed(r.prompt.size, r.max_new_tokens)
+                if n > eng.pool_pages:
+                    raise ValueError(
+                        f"request {r.rid}: needs {n} KV pages but the pool "
+                        f"only has {eng.pool_pages}; it could never be "
+                        "admitted")
         queue = deque(reqs)
 
         state = eng.blank_state(rng)
@@ -163,7 +170,9 @@ class Scheduler:
             active[s] = False
             slot_req[s] = None
             finished.append(req)
-            if self.free_on_finish:
+            # paged engines MUST free (pages return to the pool); contiguous
+            # freeing is cosmetic and stays opt-out
+            if self.free_on_finish or eng.paged:
                 nonlocal state
                 state = eng.free_slot(state, s)
 
@@ -181,15 +190,20 @@ class Scheduler:
 
         while queue or active.any():
             # ---- admission: prefill queued requests into free slots -------
+            # (FIFO: when the head request doesn't fit the page pool we wait
+            # for frees rather than admit around it)
             for s in range(B):
                 if active[s] or not queue:
                     continue
+                if not eng.can_admit(queue[0].prompt.size,
+                                     queue[0].max_new_tokens):
+                    break
                 req = queue.popleft()
                 req.status = PREFILLING
                 req.slot = s
                 req.t_admit = time.perf_counter()
                 state, first, last = eng.prefill_into_slot(
-                    state, req.prompt, s)
+                    state, req.prompt, s, max_new=req.max_new_tokens)
                 req.out_tokens.append(first)
                 req._prev_new, req._prev_last = 1, last
                 req.status = DECODING
@@ -200,6 +214,11 @@ class Scheduler:
                     finish(s)
 
             if not active.any():
+                if queue and not eng.can_admit(queue[0].prompt.size,
+                                               queue[0].max_new_tokens):
+                    raise RuntimeError(
+                        "no active slot and the head request cannot be "
+                        "admitted — page pool leak?")
                 continue                         # everything died at prefill
 
             # ---- speculative iterations over all live slots ---------------

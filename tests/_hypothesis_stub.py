@@ -3,11 +3,15 @@
 Installed by conftest.py (as ``sys.modules["hypothesis"]``) only when the
 real library is missing, so the property tests still *run* — against a fixed
 number of seeded random examples — instead of failing at collection. The
-repo's tests only use ``integers``/``floats`` strategies; anything fancier
-should use the real dependency (``pip install -e .[test]``).
+repo's tests only use ``integers``/``floats`` strategies, with ``@given``
+optionally stacked under ``@pytest.mark.parametrize`` (parametrize arguments
+pass through, strategies bind to the remaining parameters — positional ones
+rightmost, as in real hypothesis); anything fancier should use the real
+dependency (``pip install -e .[test]``).
 """
 from __future__ import annotations
 
+import inspect
 import zlib
 
 import numpy as np
@@ -32,19 +36,32 @@ class strategies:
 def given(*strats, **kw_strats):
     def deco(fn):
         # no functools.wraps: __wrapped__ would make pytest introspect the
-        # original signature and demand fixtures named after the strategies
-        def wrapper():
+        # original signature and demand fixtures named after the strategies.
+        # Parameters NOT drawn by a strategy (e.g. pytest.mark.parametrize
+        # arguments stacked outside @given, matching real-hypothesis
+        # composition) are exposed via an explicit __signature__ so pytest
+        # still injects them; they are forwarded to every drawn example.
+        undrawn = [p for p in inspect.signature(fn).parameters.values()
+                   if p.name not in kw_strats]
+        # real hypothesis binds positional strategies to the RIGHTMOST
+        # parameters; everything left of them passes through from pytest
+        split = len(undrawn) - len(strats)
+        passthrough, pos_names = undrawn[:split], [p.name
+                                                   for p in undrawn[split:]]
+
+        def wrapper(**params):
             n = getattr(wrapper, "_stub_max_examples", 20)
             # per-test fixed seed: failures reproduce across runs
             rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
             for _ in range(n):
-                drawn = [s.draw(rng) for s in strats]
+                drawn = {nm: s.draw(rng) for nm, s in zip(pos_names, strats)}
                 kw = {k: s.draw(rng) for k, s in kw_strats.items()}
-                fn(*drawn, **kw)
+                fn(**params, **drawn, **kw)
         wrapper.__name__ = fn.__name__
         wrapper.__qualname__ = fn.__qualname__
         wrapper.__doc__ = fn.__doc__
         wrapper.__module__ = fn.__module__
+        wrapper.__signature__ = inspect.Signature(passthrough)
         wrapper._stub_given = True
         return wrapper
     return deco

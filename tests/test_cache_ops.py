@@ -1,0 +1,318 @@
+"""cache_ops invariants: per-slot surgery roundtrips across every registered
+model family, page-pool allocator hygiene, and the bucketed-prefill retrace
+bound.
+
+The slot-surgery properties are the correctness backbone of mid-stream
+admission (scheduler → engine → cache_ops): writing a batch-1 state into
+slot j then reading it back must be the identity, and every other slot must
+be bit-identical — for stacked super-block KV, ring buffers, recurrent
+snapshots, paged pools, and drafter caches alike, since ``batch_axes``
+infers the layout structurally.
+"""
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import DrafterConfig, get_config
+from repro.core import drafter as D
+from repro.models import get_model, make_extras
+from repro.serving import Engine, EngineConfig, Request, Scheduler, cache_ops
+
+KEY = jax.random.PRNGKey(3)
+
+# one representative reduced arch per registered family
+FAMILY_ARCHS = {
+    "dense": "qwen2-1.5b",
+    "moe": "dbrx-132b",
+    "ssm": "mamba2-780m",
+    "hybrid": "recurrentgemma-2b",
+    "vlm": "internvl2-1b",
+    "encdec": "whisper-base",
+}
+BATCH = 3
+
+
+@lru_cache(maxsize=None)
+def _setup(family: str):
+    tcfg = get_config(FAMILY_ARCHS[family]).reduced()
+    m = get_model(tcfg)
+    tparams = m.init(KEY)
+    dcfg = DrafterConfig(n_layers=1, k_infer=2).resolve(tcfg)
+    dparams = D.init_params(dcfg, tcfg, jax.random.fold_in(KEY, 1))
+    return tcfg, dcfg, tparams, dparams
+
+
+def fresh_engine(family: str, **ecfg_kw):
+    """Uncached engine (fresh jit caches — the retrace tests count them)."""
+    tcfg, dcfg, tparams, dparams = _setup(family)
+    kw = dict(K=2, max_new_tokens=8, drafter_mode="parallel", max_len=64,
+              page_size=8)
+    kw.update(ecfg_kw)
+    return Engine(tcfg, dcfg, tparams, dparams, EngineConfig(**kw), BATCH)
+
+
+@lru_cache(maxsize=None)
+def get_engine(family: str, kv_layout: str = "contiguous"):
+    return fresh_engine(family, kv_layout=kv_layout)
+
+
+def _prefill_src(eng, seed: int):
+    tcfg = eng.tcfg
+    prompt = jax.random.randint(jax.random.fold_in(KEY, seed), (1, 4), 1,
+                                tcfg.vocab_size - 2)
+    extras = (make_extras(tcfg, 1, "prefill", KEY)
+              if tcfg.family in ("vlm", "encdec") else {})
+    return eng.prefill(prompt, extras)
+
+
+def _rows(tree, axes, slot: int):
+    """Slice batch row ``slot`` out of every batched leaf."""
+    return jax.tree.map(
+        lambda leaf, ax: leaf if ax < 0
+        else jax.lax.index_in_dim(leaf, slot, axis=ax, keepdims=True),
+        tree, axes)
+
+
+def _assert_trees_equal(a, b, msg):
+    def chk(path, x, y):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y),
+            err_msg=f"{msg} at {jax.tree_util.keystr(path)}")
+    jax.tree_util.tree_map_with_path(chk, a, b)
+
+
+# ---------------------------------------------------------------------------
+# write_slot / reset_slot roundtrip properties (every family)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+@settings(max_examples=3, deadline=None)
+@given(slot=st.integers(0, BATCH - 1), seed=st.integers(0, 2**31 - 1))
+def test_write_slot_roundtrip_identity(family, slot, seed):
+    """write(src → slot j) then read(slot j) == src row 0, bit-exact."""
+    eng = get_engine(family)
+    axes = eng.slot_axes
+    blank = eng.blank_state()
+    src = _prefill_src(eng, seed)
+    out = cache_ops.write_slot(blank, src, jnp.asarray(slot, jnp.int32), axes)
+    _assert_trees_equal(_rows(out, axes, slot), _rows(src, axes, 0),
+                        f"{family}: slot {slot} readback != src")
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+@settings(max_examples=3, deadline=None)
+@given(slot=st.integers(0, BATCH - 1), seed=st.integers(0, 2**31 - 1))
+def test_write_slot_neighbors_untouched(family, slot, seed):
+    eng = get_engine(family)
+    axes = eng.slot_axes
+    blank = eng.blank_state()
+    src = _prefill_src(eng, seed)
+    out = cache_ops.write_slot(blank, src, jnp.asarray(slot, jnp.int32), axes)
+    for other in range(BATCH):
+        if other == slot:
+            continue
+        _assert_trees_equal(_rows(out, axes, other), _rows(blank, axes, other),
+                            f"{family}: neighbor slot {other} perturbed")
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+@settings(max_examples=3, deadline=None)
+@given(slot=st.integers(0, BATCH - 1), seed=st.integers(0, 2**31 - 1))
+def test_reset_slot_restores_blank(family, slot, seed):
+    """write then reset returns the slot (and the whole state) to blank."""
+    eng = get_engine(family)
+    axes = eng.slot_axes
+    blank = eng.blank_state()
+    src = _prefill_src(eng, seed)
+    out = cache_ops.write_slot(blank, src, jnp.asarray(slot, jnp.int32), axes)
+    out = cache_ops.reset_slot(out, jnp.asarray(slot, jnp.int32), axes,
+                               fills={"new_count": eng.ecfg.max_new_tokens})
+    for s in range(BATCH):
+        _assert_trees_equal(_rows(out, axes, s), _rows(blank, axes, s),
+                            f"{family}: slot {s} not blank after reset")
+
+
+def _scrub_invalid_kv(tree):
+    """Zero K/V entries whose position slot is empty (-1): unallocated page
+    regions gather arbitrary pool bytes that no attention path can read, so
+    equality is defined up to them."""
+    def walk(node):
+        if isinstance(node, dict) and {"k", "v", "positions"} <= set(node):
+            ok = (node["positions"] >= 0)[..., None, None]
+            return {**node, "k": jnp.where(ok, node["k"], 0),
+                    "v": jnp.where(ok, node["v"], 0)}
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        return node
+    return walk(tree)
+
+
+@pytest.mark.parametrize("family", ["dense", "ssm", "hybrid"])
+def test_paged_admit_roundtrip_identity(family):
+    """Paged twin of the roundtrip: admitting through page scatter then
+    gathering the view back must reproduce the contiguous admission
+    bit-exactly (up to unreadable K/V under empty position slots), with
+    neighbor slots blank; freeing returns every page."""
+    engc = get_engine(family)
+    engp = get_engine(family, "paged")
+    prompt = np.asarray([5, 9, 2, 11, 4], np.int32)
+    rng = jax.random.PRNGKey(9)
+    slot = 1
+    sc, fc, lc = engc.prefill_into_slot(engc.blank_state(), prompt, slot,
+                                        rng=rng)
+    sp, fp, lp = engp.prefill_into_slot(engp.blank_state(), prompt, slot,
+                                        rng=rng)
+    assert (fc, lc) == (fp, lp)
+    axes = engc.slot_axes         # axes of the *contiguous view* structure
+    view = cache_ops.gather_state(
+        {k: v for k, v in sp.items() if k != "block_table"},
+        sp["block_table"], engp.pspec)
+    view, sc = _scrub_invalid_kv(view), _scrub_invalid_kv(sc)
+    for s in range(BATCH):
+        _assert_trees_equal(_rows(view, axes, s), _rows(sc, axes, s),
+                            f"{family}: paged view slot {s} != contiguous")
+    sp = engp.free_slot(sp, slot)
+    assert eng_pool_restored(engp)
+    assert int(sp["block_table"][slot].max()) == -1
+
+
+def eng_pool_restored(eng) -> bool:
+    return (eng.allocator.n_free == eng.pool_pages
+            and eng.allocator.n_used == 0
+            and all(not ps for ps in eng._slot_pages))
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator unit tests
+# ---------------------------------------------------------------------------
+
+def test_allocator_alloc_free_cycle():
+    a = cache_ops.BlockAllocator(8)
+    p1 = a.alloc(3)
+    p2 = a.alloc(5)
+    assert sorted(p1 + p2) == list(range(8)) and a.n_free == 0
+    assert a.alloc(1) is None          # exhausted: caller waits, no raise
+    a.free(p1)
+    assert a.n_free == 3
+    p3 = a.alloc(2)
+    assert set(p3) <= set(p1)
+    a.free(p2)
+    a.free(p3)
+    assert a.n_free == 8 and a.n_used == 0
+
+
+def test_allocator_rejects_double_free_and_foreign():
+    a = cache_ops.BlockAllocator(4)
+    p = a.alloc(2)
+    a.free(p)
+    with pytest.raises(ValueError):
+        a.free(p)                      # double free
+    with pytest.raises(ValueError):
+        a.free([99])                   # never allocated
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_pages=st.integers(1, 32), seed=st.integers(0, 2**31 - 1))
+def test_allocator_never_leaks_or_aliases(n_pages, seed):
+    rng = np.random.default_rng(seed)
+    a = cache_ops.BlockAllocator(n_pages)
+    live = []
+    for _ in range(50):
+        if live and rng.random() < 0.4:
+            a.free(live.pop(int(rng.integers(len(live)))))
+        else:
+            got = a.alloc(int(rng.integers(0, n_pages + 1)))
+            if got is not None:
+                live.append(got)
+        flat = [p for ps in live for p in ps]
+        assert len(flat) == len(set(flat)), "aliased pages"
+        assert len(flat) + a.n_free == n_pages, "leaked pages"
+    for ps in live:
+        a.free(ps)
+    assert a.n_free == n_pages
+
+
+def test_no_page_leak_after_eos_and_rollback():
+    """A full paged serve — speculative rollback-invalidation every
+    iteration, EOS mid-stream retiring slots — must return every page."""
+    eng = get_engine("dense", "paged")
+    prompts = [np.asarray([5, 6, 7, 8, 9][:n], np.int32)
+               for n in (3, 4, 5, 2, 5)]
+    ref = Scheduler(eng).serve([Request(p, max_new_tokens=6)
+                                for p in prompts])
+    eos = int(ref["results"][0]["tokens"][2])   # EOS hit mid-decode
+    rep = Scheduler(eng, eos_id=eos).serve([Request(p, max_new_tokens=6)
+                                            for p in prompts])
+    assert rep["n_requests"] == len(prompts)
+    assert eng_pool_restored(eng)
+
+
+def test_pool_smaller_than_slots_serializes_admission():
+    """With a pool that fits only one request, admissions serialize through
+    the free list but every request still completes with exact tokens."""
+    eng = get_engine("dense", "paged")
+    tight = fresh_engine("dense", kv_layout="paged", pool_pages=3)
+    prompts = [np.asarray([3, 4, 5], np.int32),
+               np.asarray([7, 8, 9, 10], np.int32)]
+    rep_ref = Scheduler(eng).serve([Request(p, max_new_tokens=4)
+                                    for p in prompts])
+    rep = Scheduler(tight).serve([Request(p, max_new_tokens=4)
+                                  for p in prompts])
+    for a, b in zip(rep_ref["results"], rep["results"]):
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert tight.allocator.n_free == 3
+
+
+# ---------------------------------------------------------------------------
+# bucketed-prefill retrace bound
+# ---------------------------------------------------------------------------
+
+def _admit_lengths(eng, lengths):
+    rng = np.random.default_rng(0)
+    for n in lengths:
+        state = eng.blank_state()
+        prompt = rng.integers(1, eng.tcfg.vocab_size - 2,
+                              size=int(n)).astype(np.int32)
+        eng.prefill_into_slot(state, prompt, 0)
+        if eng.paged:
+            eng.free_slot(state, 0)
+
+
+def test_prefill_retrace_bound_padded():
+    """N distinct prompt lengths compile at most ceil(log2(max_len)) padded
+    prefill traces (the jit cache-size counter is the compile count)."""
+    eng = fresh_engine("dense")
+    max_len = eng.ecfg.max_len
+    bound = int(np.ceil(np.log2(max_len)))
+    lengths = list(range(1, 13))       # 12 distinct lengths > bound
+    assert len(lengths) > bound
+    _admit_lengths(eng, lengths)
+    assert eng._prefill_pad._cache_size() <= bound
+    assert eng._prefill._cache_size() == 0     # exact-length path never used
+
+
+def test_prefill_retrace_bound_chunked():
+    """Recurrent families chunk instead of pad: prefill traces are bounded
+    by the distinct leading buckets, chunk traces by the distinct trailing
+    ones — both within ceil(log2(max_len))."""
+    eng = fresh_engine("ssm")
+    bound = int(np.ceil(np.log2(eng.ecfg.max_len)))
+    _admit_lengths(eng, list(range(1, 13)))
+    assert eng._prefill._cache_size() <= bound
+    assert eng._chunk._cache_size() <= bound
+    assert eng._prefill_pad._cache_size() == 0
+
+
+def test_prefill_buckets_decomposition():
+    assert Engine.prefill_buckets(1) == [1]
+    assert Engine.prefill_buckets(8) == [8]
+    assert Engine.prefill_buckets(7) == [4, 2, 1]
+    assert Engine.prefill_buckets(13) == [8, 4, 1]
+    for n in range(1, 200):
+        bs = Engine.prefill_buckets(n)
+        assert sum(bs) == n and bs == sorted(bs, reverse=True)
+        assert all(b & (b - 1) == 0 for b in bs)

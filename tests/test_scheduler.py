@@ -15,6 +15,7 @@ from functools import lru_cache
 
 import jax
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import DrafterConfig, get_config
@@ -38,18 +39,19 @@ def _setup():
 _ENGINES = {}
 
 
-def get_engine(batch=2, mode="parallel"):
-    if (batch, mode) not in _ENGINES:
+def get_engine(batch=2, mode="parallel", kv_layout="contiguous"):
+    if (batch, mode, kv_layout) not in _ENGINES:
         tcfg, dcfg, tparams, dparams = _setup()
         K = 3
         if mode == "none":
             dcfg = dparams = None
             K = 0
-        _ENGINES[batch, mode] = Engine(
+        _ENGINES[batch, mode, kv_layout] = Engine(
             tcfg, dcfg, tparams, dparams,
             EngineConfig(K=K, max_new_tokens=16, drafter_mode=mode,
-                         max_len=64), batch)
-    return _ENGINES[batch, mode]
+                         max_len=64, kv_layout=kv_layout, page_size=8),
+            batch)
+    return _ENGINES[batch, mode, kv_layout]
 
 
 def make_prompts(n, length=4, seed=0, vocab=200):
@@ -182,3 +184,63 @@ def test_random_workload_invariants(n_requests, budget, seed):
         assert res["n_new"] == req.max_new_tokens  # no EOS id ⇒ exact budget
         assert 1.0 <= res["acceptance_length"] <= eng.ecfg.K + 1 or \
             res["iters"] == 0
+
+
+@settings(max_examples=3, deadline=None)
+@given(n_requests=st.integers(1, 6), budget=st.integers(1, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_random_workload_invariants_paged(n_requests, budget, seed):
+    """The same lifecycle invariants hold through the paged engine — with
+    variable prompt lengths (exercising bucketed admission and partial
+    pages) — and the page pool drains to empty afterwards."""
+    eng = get_engine(batch=2, kv_layout="paged")
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rng.integers(1, 200,
+                                 size=int(rng.integers(1, 10))).astype(
+                        np.int32),
+                    max_new_tokens=int(rng.integers(1, budget + 1)))
+            for _ in range(n_requests)]
+    rep = Scheduler(eng).serve(reqs)
+    assert rep["n_requests"] == n_requests
+    assert all(r.status == "finished" for r in reqs)
+    for req, res in zip(sorted(reqs, key=lambda r: r.rid), rep["results"]):
+        assert res["n_new"] == req.max_new_tokens
+    assert eng.allocator.n_free == eng.pool_pages
+    assert eng.allocator.n_used == 0
+
+
+# ---------------------------------------------------------------------------
+# vlm/encdec admission: pinned NotImplementedError (ROADMAP extras plumbing)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _unsupported_engine(arch):
+    tcfg = get_config(arch).reduced()
+    m = get_model(tcfg)
+    return Engine(tcfg, None, m.init(KEY), None,
+                  EngineConfig(K=0, max_new_tokens=4, drafter_mode="none",
+                               max_len=64), 2)
+
+
+@pytest.mark.parametrize("arch", ["internvl2-1b", "whisper-base"])
+def test_vlm_encdec_admission_error_message(arch):
+    """The scheduler refuses vlm/encdec targets with the exact message the
+    ROADMAP follow-up will delete — pin it so the refusal can't silently
+    drift while admission still lacks per-request extras."""
+    with pytest.raises(NotImplementedError,
+                       match="per-slot admission needs per-request extras"):
+        Scheduler(_unsupported_engine(arch))
+
+
+@pytest.mark.parametrize("arch", ["internvl2-1b", "whisper-base"])
+@pytest.mark.xfail(raises=NotImplementedError, strict=True,
+                   reason="ROADMAP: per-request extras plumbing for "
+                          "vlm/encdec scheduler admission — turn me green")
+def test_vlm_encdec_scheduler_serve(arch):
+    """The red test the extras-plumbing follow-up turns green: serving a
+    vlm/encdec request through the continuous scheduler end-to-end."""
+    eng = _unsupported_engine(arch)
+    rep = Scheduler(eng).serve(
+        [Request(np.asarray([3, 4, 5], np.int32), max_new_tokens=2)])
+    assert rep["n_requests"] == 1
+    assert rep["results"][0]["n_new"] == 2
