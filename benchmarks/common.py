@@ -134,3 +134,19 @@ def timed(fn, *a, repeats=3, **k):
 
 def row(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def write_results_csv(name: str, rows: list) -> str:
+    """Persist a benchmark table under results/ (list of dicts, union of
+    keys as header) so reruns have the honest numbers on record, not just
+    scrollback."""
+    import csv
+    path = os.path.join(os.path.dirname(__file__), "..", "results", name)
+    keys: list = []
+    for r in rows:
+        keys.extend(k for k in r if k not in keys)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys)
+        w.writeheader()
+        w.writerows(rows)
+    return path

@@ -23,7 +23,8 @@ def main() -> None:
                             table3_hidden_state, table4_layers,
                             table5_embedding, table6_depth, table7_epochs,
                             table8_seqlen, table9_acceptance, table10_otps,
-                            table11_continuous, table12_paged, roofline)
+                            table11_continuous, table12_paged, table13_async,
+                            roofline)
 
     epochs = 12 if args.quick else 22
     jobs = {
@@ -39,6 +40,7 @@ def main() -> None:
         "10": lambda: table10_otps.run(epochs=epochs),
         "11": lambda: table11_continuous.run(epochs=epochs),
         "12": lambda: table12_paged.run(epochs=epochs),
+        "13": lambda: table13_async.run(epochs=epochs),
         "roofline": lambda: roofline.run(),
     }
     wanted = list(jobs) if args.tables == "all" else [

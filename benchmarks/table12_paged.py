@@ -4,11 +4,16 @@ prefill vs the contiguous per-slot layout.
 Two claims, both at FIXED KV-cache memory (the paged pool holds exactly the
 same number of positions as the contiguous engine's B × max_len rows):
 
-  residency — a request only claims ceil(need/page) pages for its actual
-      prompt+budget, not a max_len row, so the same bytes hold ≥2x the
-      concurrently-resident requests on a long-tail mix (more slots than the
-      contiguous engine could ever back). Reported as peak resident requests
-      per MiB of KV cache.
+  residency — a request claims pages for what it actually uses, not a
+      max_len row, so the same bytes hold ≥2x the concurrently-resident
+      requests on a long-tail mix (more slots than the contiguous engine
+      could ever back). Reported as peak resident requests per MiB of KV
+      cache, in BOTH growth modes: "upfront" (PR-2: reserve
+      ceil((prompt+budget+overshoot)/page) for the lifetime) and the
+      default "incremental" (claim the prompt + one speculative block,
+      grow page-by-page as the slot lengthens — the honest numbers, since
+      peak pages now track real lengths; benchmarks/table13_async.py adds
+      the arrival-driven comparison with preemption).
 
   admission latency — per-slot admission prefills retrace per *prompt
       length* in the contiguous baseline; power-of-two bucketing compiles
@@ -24,7 +29,7 @@ import time
 import numpy as np
 
 from benchmarks.common import get_corpus, get_target, longtail_budgets, row, \
-    train_drafter
+    train_drafter, write_results_csv
 from repro.serving import Engine, EngineConfig, Request, Scheduler
 
 PAGE = 16
@@ -43,12 +48,17 @@ def kv_bytes(eng) -> int:
     return sum(x.size * x.dtype.itemsize for x in leaves)
 
 
-def peak_resident(reqs) -> int:
-    events = [(r.t_admit, 1) for r in reqs] + [(r.t_finish, -1) for r in reqs]
-    live = peak = 0
-    for _, d in sorted(events):
-        live += d
-        peak = max(peak, live)
+def peak_resident(events) -> int:
+    """Max requests concurrently holding KV (admit → preempt/finish), from
+    the scheduler's chronological virtual-time event trace — a preempted
+    request holds zero pages while evicted, so it must not count."""
+    live, peak = set(), 0
+    for _, kind, rid in events:
+        if kind == "admit":
+            live.add(rid)
+        elif kind in ("preempt", "finish"):
+            live.discard(rid)
+        peak = max(peak, len(live))
     return peak
 
 
@@ -73,13 +83,14 @@ def run(epochs=15, n_requests=24, max_new=24):
     dcfg, dp, _ = train_drafter("table9_peagle_" + arch, arch=arch,
                                 epochs=epochs, n_layers=4, k_train=8)
 
-    def make(layout, batch, bucket, pool_pages=0):
+    def make(layout, batch, bucket, pool_pages=0, kv_growth="incremental"):
         return Engine(tcfg, dcfg, tparams, dp,
                       EngineConfig(K=5, max_new_tokens=max_new,
                                    drafter_mode="parallel", max_len=MAX_LEN,
                                    kv_layout=layout, page_size=PAGE,
                                    pool_pages=pool_pages,
-                                   bucket_prefill=bucket), batch)
+                                   bucket_prefill=bucket,
+                                   kv_growth=kv_growth), batch)
 
     # ---- residency at fixed KV memory ---------------------------------
     corpus = get_corpus(arch)
@@ -89,31 +100,45 @@ def run(epochs=15, n_requests=24, max_new=24):
     budgets = longtail_budgets(n_requests, max_new, rng)
 
     cont = make("contiguous", B_CONT, False)
-    paged = make("paged", B_PAGED, True,
-                 pool_pages=B_CONT * MAX_LEN // PAGE)
-    bc, bp = kv_bytes(cont), kv_bytes(paged)
+    paged_up = make("paged", B_PAGED, True,
+                    pool_pages=B_CONT * MAX_LEN // PAGE, kv_growth="upfront")
+    paged_inc = make("paged", B_PAGED, True,
+                     pool_pages=B_CONT * MAX_LEN // PAGE)
+    bc, bp = kv_bytes(cont), kv_bytes(paged_inc)
 
-    results = {}
-    for name, eng in [("contiguous", cont), ("paged", paged)]:
-        reqs = [Request(p, max_new_tokens=b)
-                for p, b in zip(prompts, budgets)]
+    results, csv_rows = {}, []
+    for name, eng in [("contiguous", cont), ("paged_upfront", paged_up),
+                      ("paged_incremental", paged_inc)]:
         rep = None
+        # the upfront row is the PR-2 baseline: static admission, no
+        # eviction (preemption is an incremental-growth mechanism)
+        preempt = None if name == "paged_incremental" else False
         for _ in range(2):                       # warm second run
             reqs = [Request(p, max_new_tokens=b)
                     for p, b in zip(prompts, budgets)]
-            rep = Scheduler(eng, sync_every=2).serve(reqs)
-        peak = peak_resident(reqs)
+            rep = Scheduler(eng, sync_every=2, preempt=preempt).serve(reqs)
+        peak = peak_resident(rep["events"])
         byt = kv_bytes(eng)
         per_mib = peak / (byt / 2**20)
+        pages = (f" peak_pages={eng.allocator.peak_used}/{eng.pool_pages}"
+                 if eng.paged else "")
         results[name] = (peak, byt, rep["otps"])
+        csv_rows.append(dict(
+            layout=name, otps=round(rep["otps"], 2), peak_resident=peak,
+            kv_bytes=byt, resident_per_mib=round(per_mib, 3),
+            peak_pages=eng.allocator.peak_used if eng.paged else "",
+            preemptions=rep["preemptions"]))
         row(f"table12/{name}", 1e6 / max(rep["otps"], 1e-9),
             f"OTPS={rep['otps']:.1f} peak_resident={peak} "
-            f"kv_bytes={byt} resident_per_MiB={per_mib:.2f}")
-    gain = (results["paged"][0] / results["paged"][1]) / (
-        results["contiguous"][0] / results["contiguous"][1])
+            f"kv_bytes={byt} resident_per_MiB={per_mib:.2f}{pages}")
+    gain = (results["paged_incremental"][0] / results["paged_incremental"][1]
+            ) / (results["contiguous"][0] / results["contiguous"][1])
     row("table12/residency_gain", gain,
-        f"paged vs contiguous resident-requests-per-byte = {gain:.2f}x "
-        f"(pool bytes {bp} vs {bc})")
+        f"paged(incremental) vs contiguous resident-requests-per-byte = "
+        f"{gain:.2f}x (pool bytes {bp} vs {bc})")
+    csv_rows.append(dict(layout="residency_gain",
+                         resident_per_mib=round(gain, 3)))
+    print(f"# wrote {write_results_csv('table12_paged.csv', csv_rows)}")
 
     # ---- admission-prefill latency -----------------------------------
     # cold: a stream of distinct prompt lengths (every length is new — the

@@ -10,7 +10,10 @@ depths, each under BOTH batching disciplines:
                   finished slot is reused immediately
 
 Requests get heterogeneous max_new_tokens budgets, so continuous batching's
-straggler win is visible in the OTPS column.
+straggler win is visible in the OTPS column. Two extra rows serve the same
+mix through the paged-KV engine (incremental page growth) and under Poisson
+arrival times on the scheduler's virtual clock (queue-wait / latency
+percentiles, lossless preemption when the pool runs dry).
 
     PYTHONPATH=src python examples/serve_batched.py [--requests 12]
 """
@@ -39,6 +42,9 @@ def main():
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--sync-every", type=int, default=4,
                     help="scheduler iterations between host syncs")
+    ap.add_argument("--mean-gap", type=float, default=2.0,
+                    help="mean Poisson inter-arrival gap (virtual steps) "
+                         "for the async row")
     args = ap.parse_args()
 
     tcfg = get_config("qwen2-1.5b").reduced()
@@ -100,9 +106,10 @@ def main():
               f"(P/AR cont: {co_p / co_a:.2f}x, P/vanilla: {co_p / co0:.2f}x)")
 
     # paged KV: same pool bytes as the contiguous engine's batch x max_len
-    # rows, but 2x the slots — the long-tail mix keeps more requests
-    # resident per byte (benchmarks/table12_paged.py quantifies this;
-    # losslessness across layouts is a test invariant)
+    # rows, but 2x the slots — incremental growth claims pages as slots
+    # actually lengthen, so the long-tail mix keeps more requests resident
+    # per byte (benchmarks/table12_paged.py quantifies this; losslessness
+    # across layouts is a test invariant)
     paged = Engine(tcfg, dcfg_p, tparams, tr_p.dparams,
                    EngineConfig(K=5, max_new_tokens=args.max_new,
                                 drafter_mode="parallel", max_len=128,
@@ -117,7 +124,25 @@ def main():
     print(f"{'P-EAGLE paged':16s} {'—':>11s} {pg['otps']:11.1f} "
           f"{'—':>10s} {pg['mean_acceptance_length']:5.2f}   "
           f"({2 * args.batch} slots on {args.batch}-slot pool bytes, "
-          f"page_size=16)")
+          f"page_size=16, peak {paged.allocator.peak_used} pages)")
+
+    # async arrivals: the same engine under Poisson request arrival times on
+    # the scheduler's deterministic virtual clock — queue-wait and
+    # end-to-end latency percentiles, with lossless preemption when the
+    # pool runs dry (benchmarks/table13_async.py sweeps this properly)
+    arrivals = np.cumsum(rng.exponential(args.mean_gap,
+                                         size=args.requests)).tolist()
+    asy = None
+    for _ in range(2):
+        asy = Scheduler(paged, sync_every=args.sync_every).serve(
+            [Request(p, max_new_tokens=b, arrival_time=a)
+             for p, b, a in zip(prompts, budgets, arrivals)])
+    print(f"{'P-EAGLE async':16s} {'—':>11s} {asy['otps']:11.1f} "
+          f"{'—':>10s} {asy['mean_acceptance_length']:5.2f}   "
+          f"(Poisson gap {args.mean_gap}: latency p50/p99 "
+          f"{asy['p50_latency_vt']:.0f}/{asy['p99_latency_vt']:.0f} vt, "
+          f"wait p99 {asy['p99_wait_vt']:.0f} vt, "
+          f"{asy['preemptions']} preemptions)")
 
 
 if __name__ == "__main__":

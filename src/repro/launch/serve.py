@@ -1,25 +1,32 @@
-"""Serving launcher: load a trained drafter checkpoint and serve a queue of
-requests through the continuous-batching scheduler, printing per-request and
-aggregate OTPS / acceptance / latency stats.
+"""Serving launcher: load a trained drafter checkpoint and serve a stream of
+requests through the event-driven continuous-batching scheduler, printing
+per-request and aggregate OTPS / acceptance / latency stats.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
         --ckpt results/ckpt --mode parallel --k 5 --requests 12
 
+``--mean-gap G`` spaces request arrivals by Exp(G) gaps on the scheduler's
+deterministic virtual clock (0 = everything arrives at t=0); async runs
+report virtual-time p50/p99 latency and queue wait plus preemption counts.
+``--kv-growth upfront`` restores PR-2's static admission sizing,
+``--no-preempt`` disables eviction (slots stall on pool exhaustion instead).
 ``--round-based`` serves the same queue with the pre-scheduler baseline
 (batch refilled only between full generation rounds) for comparison.
+vlm/encdec targets serve through the scheduler like everything else —
+per-request frontend extras (vision/encoder embeds) are synthesized as
+deterministic stubs at admission.
 """
 from __future__ import annotations
 
 import argparse
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import load_pytree
 from repro.configs import DrafterConfig, get_config
 from repro.core import drafter as D
-from repro.models import get_model, make_extras
+from repro.models import get_model
 from repro.serving import (Engine, EngineConfig, Request, Scheduler,
                            serve_round_based)
 
@@ -52,6 +59,17 @@ def main():
     ap.add_argument("--no-bucket", action="store_true",
                     help="disable power-of-two bucketing of admission "
                          "prefills (retraces per distinct prompt length)")
+    ap.add_argument("--mean-gap", type=float, default=0.0,
+                    help="mean exponential inter-arrival gap in virtual "
+                         "steps (Poisson arrivals); 0 = all requests at t=0")
+    ap.add_argument("--kv-growth", default="incremental",
+                    choices=["incremental", "upfront"],
+                    help="paged admission sizing: grow pages as slots "
+                         "lengthen (incremental) or reserve prompt+budget "
+                         "up front (PR-2 baseline)")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="never evict a running slot on pool exhaustion; "
+                         "slots stall until pages free up")
     args = ap.parse_args()
 
     reduced = args.reduced or jax.default_backend() != "tpu"
@@ -80,59 +98,59 @@ def main():
                               kv_layout=args.kv_layout,
                               page_size=args.page_size,
                               pool_pages=args.pool_pages,
-                              bucket_prefill=not args.no_bucket),
+                              bucket_prefill=not args.no_bucket,
+                              kv_growth=args.kv_growth),
                  args.batch)
     rng = np.random.default_rng(3)
     # varied prompt lengths exercise bucketed admission; the round-based
     # baseline prefills whole batches, so give it equal lengths to compare
     # the two disciplines on an identical workload
-    plen = (lambda: 8) if args.round_based or tcfg.family in (
-        "vlm", "encdec") else (lambda: int(rng.integers(4, 13)))
+    plen = (lambda: 8) if args.round_based else (
+        lambda: int(rng.integers(4, 13)))
     prompts = [rng.integers(0, tcfg.vocab_size - 2,
                             size=plen()).astype(np.int32)
                for _ in range(args.requests)]
     budgets = rng.integers(max(args.max_new // 2, 1), args.max_new + 1,
                            size=args.requests).tolist()
+    arrivals = (np.cumsum(rng.exponential(args.mean_gap,
+                                          size=args.requests)).tolist()
+                if args.mean_gap > 0 else [0.0] * args.requests)
+    if args.round_based and tcfg.family in ("vlm", "encdec"):
+        raise SystemExit(
+            "--round-based is a whole-batch loop without per-request "
+            "extras; serve vlm/encdec through the scheduler (default)")
 
-    if tcfg.family in ("vlm", "encdec"):
-        if args.kv_layout == "paged":
-            raise SystemExit(
-                "--kv-layout paged needs the scheduler (per-slot admission "
-                "allocates pages), which cannot admit vlm/encdec targets "
-                "yet (ROADMAP: per-request extras plumbing)")
-        # the scheduler can't admit per-request extras yet (ROADMAP item);
-        # serve these families whole-batch like the pre-scheduler launcher
-        # (cycle prompts so the batch is full even when requests < batch;
-        # whole-batch prefill needs equal lengths, so clip to the shortest)
-        plen = min(p.size for p in prompts)
-        batch_prompts = jnp.stack(
-            [prompts[i % len(prompts)][:plen] for i in range(args.batch)])
-        extras = make_extras(tcfg, args.batch, "prefill", key)
-        r = eng.run(batch_prompts, extras)
-        r = eng.run(batch_prompts, extras)   # steady-state timing
-        print(f"mode={args.mode} K={args.k} (whole-batch, {tcfg.family}): "
-              f"OTPS={r['otps']:.1f} AL={r['acceptance_length']:.2f} "
-              f"({r['new_tokens']} tokens, {r['iterations']} iterations)")
-        return
-
-    sched = Scheduler(eng, eos_id=args.eos_id, sync_every=args.sync_every)
+    # vlm/encdec requests need no explicit extras here: admission
+    # synthesizes deterministic per-prompt stub frontend inputs (real
+    # deployments attach actual vision/audio features via Request.extras)
+    sched = Scheduler(eng, eos_id=args.eos_id, sync_every=args.sync_every,
+                      preempt=False if args.no_preempt else None)
     rep = None
     for _ in range(2):      # second run = warm, compile excluded
-        rep = sched.serve([Request(p, max_new_tokens=b)
-                           for p, b in zip(prompts, budgets)])
+        rep = sched.serve([Request(p, max_new_tokens=b, arrival_time=a)
+                           for p, b, a in zip(prompts, budgets, arrivals)])
     print(f"mode={args.mode} K={args.k} batch={args.batch} "
           f"requests={rep['n_requests']}: OTPS={rep['otps']:.1f} "
           f"AL={rep['mean_acceptance_length']:.2f} "
           f"({rep['total_new_tokens']} tokens, {rep['iterations']} iterations,"
           f" mean latency {rep['mean_latency_s'] * 1e3:.0f} ms)")
+    if args.mean_gap > 0 or rep["preemptions"]:
+        print(f"async: makespan={rep['makespan_vt']:.1f} vt  "
+              f"latency p50/p99={rep['p50_latency_vt']:.1f}/"
+              f"{rep['p99_latency_vt']:.1f} vt  "
+              f"wait p50/p99={rep['p50_wait_vt']:.1f}/"
+              f"{rep['p99_wait_vt']:.1f} vt  "
+              f"preemptions={rep['preemptions']}")
     for r in rep["results"]:
+        pre = f"  preempt={r['n_preempt']}" if r["n_preempt"] else ""
         print(f"  req {r['rid']:3d}: {r['n_new']:3d} tok in {r['iters']:3d} "
               f"iters  AL={r['acceptance_length']:.2f}  "
-              f"latency={r['latency_s'] * 1e3:6.1f} ms")
+              f"latency={r['latency_s'] * 1e3:6.1f} ms{pre}")
     if eng.paged:
         print(f"paged KV: {eng.pool_pages} pages x {args.page_size} "
-              f"positions shared by {args.batch} slots "
-              f"({eng.allocator.n_free} free after drain)")
+              f"positions shared by {args.batch} slots, {args.kv_growth} "
+              f"growth (peak {eng.allocator.peak_used} pages, "
+              f"{eng.allocator.n_free} free after drain)")
 
     if args.round_based:
         rb_eng = eng

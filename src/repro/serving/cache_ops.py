@@ -168,6 +168,7 @@ class BlockAllocator:
         self.n_pages = n_pages
         self._free: List[int] = list(range(n_pages - 1, -1, -1))
         self._used: set = set()
+        self.peak_used = 0     # high-water mark (honest residency metrics)
 
     @property
     def n_free(self) -> int:
@@ -184,6 +185,7 @@ class BlockAllocator:
             return None
         pages = [self._free.pop() for _ in range(n)]
         self._used.update(pages)
+        self.peak_used = max(self.peak_used, len(self._used))
         return pages
 
     def free(self, pages: List[int]) -> None:
@@ -320,6 +322,24 @@ def scatter_state(pstate, view_state, table: Array, spec):
     return jax.tree.map(
         lambda pool, view, tag: view if tag == NOT_PAGED
         else scatter_pages(pool, view, table, tag), pstate, view_state, spec)
+
+
+def blank_pages(pstate, table_row: Array, spec):
+    """Mark every position slot of the pages in ``table_row`` (nb,) empty
+    (-1). Freed pages MUST read as empty when recycled: incremental growth
+    (``Engine.ensure_capacity``) splices a pool page into another slot's
+    table without the full-row overwrite an admission does, so a stale
+    positions entry would resurrect the previous owner's KV as attendable
+    history. K/V bytes are left in place — empty positions mask them on
+    every attention path. Unallocated entries (-1) are dropped."""
+    def blank(pool, tag):
+        if tag != PAGED_POS:
+            return pool
+        ax = pool.ndim + _page_axis(tag)
+        nb, page = table_row.shape[0], pool.shape[ax + 1]
+        view = jnp.full(pool.shape[:ax] + (1, nb * page), -1, pool.dtype)
+        return scatter_pages(pool, view, table_row[None], tag)
+    return jax.tree.map(blank, pstate, spec)
 
 
 def admit_pages(pstate, src, slot: Array, table_row: Array, axes, spec):

@@ -50,6 +50,14 @@ class EngineConfig:
     kv_layout: str = "contiguous"
     page_size: int = 16              # positions per page (paged layout)
     pool_pages: int = 0              # pool size; 0 = batch * max_len/page_size
+    # "incremental": admission claims only the pages the prompt (plus one
+    # speculative block) occupies; `ensure_capacity` grows the slot's
+    # allocation page-by-page as decode crosses page boundaries, so the pool
+    # holds requests by their *current* length, not their worst case.
+    # "upfront": PR-2 behavior — admission reserves prompt+budget+overshoot
+    # for the request's whole lifetime (the static-admission baseline
+    # benchmarks/table13_async.py compares against).
+    kv_growth: str = "incremental"
     # Power-of-two bucketing for per-slot admission prefills, so a stream of
     # distinct prompt lengths compiles O(log2 max_len) traces instead of one
     # per length. Append-only attention families right-pad to the bucket
@@ -102,7 +110,10 @@ class Engine:
                            if tcfg.family == "vlm" else 0)
         if ecfg.kv_layout not in ("contiguous", "paged"):
             raise ValueError(f"unknown kv_layout {ecfg.kv_layout!r}")
+        if ecfg.kv_growth not in ("incremental", "upfront"):
+            raise ValueError(f"unknown kv_growth {ecfg.kv_growth!r}")
         self.paged = ecfg.kv_layout == "paged"
+        self.incremental = self.paged and ecfg.kv_growth == "incremental"
         if self.paged:
             if ecfg.max_len % ecfg.page_size:
                 raise ValueError(
@@ -122,6 +133,11 @@ class Engine:
         self._paged_admit = jax.jit(self._paged_admit_impl)
         self._free = jax.jit(self._free_impl)
         self._paged_free = jax.jit(self._paged_free_impl)
+        # one trace for every (slot, page-count) combination: slot and the
+        # full-width block-table row are both traced, so decode-time growth
+        # never recompiles (pinned by tests/test_cache_ops.py)
+        self._set_table_row = jax.jit(
+            lambda bt, slot, row: bt.at[slot].set(row))
         self._slot_axes = None
         self._paged_axes = None
         self._pspec = None
@@ -297,6 +313,11 @@ class Engine:
                 start += c
             return state
         Pb = 1 << max(P - 1, 0).bit_length()     # next power of two >= P
+        if self.pos_offset + Pb >= self.ecfg.max_len:
+            # bucket would pad past the cache (long recompute-prefill
+            # resumes, vlm offsets): take the exact-length trace instead
+            return self._prefill(self.tparams, self.dparams, prompt, extras,
+                                 rng)
         padded = jnp.pad(prompt, ((0, 0), (0, Pb - P)))
         return self._prefill_pad(self.tparams, self.dparams, padded,
                                  jnp.asarray(P, jnp.int32), extras, rng)
@@ -373,6 +394,20 @@ class Engine:
                 (self.batch, self.pages_per_slot), -1, jnp.int32)
         return state
 
+    @property
+    def commit_stride(self) -> int:
+        """Max positions one speculative iteration writes into the cache
+        (K drafted + 1 bonus; 1 for vanilla AR): the capacity headroom a
+        slot needs beyond its last committed position before it may step."""
+        return (self.ecfg.K if self.ecfg.drafter_mode != "none" else 0) + 1
+
+    def pages_for(self, length: int) -> int:
+        """Pages covering ``length`` cache positions (capped at max_len)."""
+        if not self.paged:
+            return 0
+        return -(-min(max(length, 1), self.ecfg.max_len)
+                 // self.ecfg.page_size)
+
     def pages_needed(self, prompt_len: int,
                      max_new: Optional[int] = None) -> int:
         """KV pages one request occupies for its whole lifetime: prompt +
@@ -380,18 +415,69 @@ class Engine:
         if not self.paged:
             return 0
         budget = self.ecfg.max_new_tokens if max_new is None else max_new
-        need = min(prompt_len + self.pos_offset + budget + self.ecfg.K + 1,
-                   self.ecfg.max_len)
-        return -(-need // self.ecfg.page_size)
+        return self.pages_for(prompt_len + self.pos_offset + budget
+                              + self.ecfg.K + 1)
 
-    def can_admit(self, prompt_len: int,
-                  max_new: Optional[int] = None) -> bool:
-        """Whether the pool can hold one more request of this shape right
+    def initial_pages(self, prompt_len: int,
+                      max_new: Optional[int] = None) -> int:
+        """Pages admission claims up front. Upfront growth reserves the
+        whole lifetime (``pages_needed``); incremental growth claims only
+        the prompt plus one speculative block — ``ensure_capacity`` grows
+        the allocation as the slot's length actually crosses page
+        boundaries during decode."""
+        if not self.paged:
+            return 0
+        if not self.incremental:
+            return self.pages_needed(prompt_len, max_new)
+        return self.pages_for(prompt_len + self.pos_offset
+                              + self.commit_stride)
+
+    def can_admit(self, prompt_len: int, max_new: Optional[int] = None,
+                  full: bool = False) -> bool:
+        """Whether the pool can admit one more request of this shape right
         now (always True for the contiguous layout — a free slot is a free
-        max_len row)."""
-        return (not self.paged
-                or self.pages_needed(prompt_len, max_new)
-                <= self.allocator.n_free)
+        max_len row). ``full`` gates on the whole-lifetime need even under
+        incremental growth — the scheduler uses it when re-admitting a
+        preempted request, so a resumed victim cannot be immediately
+        re-evicted by the same pressure that evicted it."""
+        if not self.paged:
+            return True
+        need = (self.pages_needed(prompt_len, max_new) if full
+                else self.initial_pages(prompt_len, max_new))
+        return need <= self.allocator.n_free
+
+    def slot_capacity(self, slot: int) -> int:
+        """Cache positions the slot's current page allocation covers."""
+        if not self.paged:
+            return self.ecfg.max_len
+        return len(self._slot_pages[slot]) * self.ecfg.page_size
+
+    def ensure_capacity(self, state: dict, slot: int, length: int):
+        """Grow ``slot``'s page allocation to cover ``length`` positions,
+        claiming pages from the pool only when the slot's length actually
+        crossed a page boundary. Returns ``(state, ok)`` — ``ok`` False
+        when the pool is exhausted (the caller preempts or stalls the
+        slot; stepping a slot without capacity would silently drop KV
+        writes beyond its pages). No-op (always ok) for contiguous
+        layouts and upfront growth, where capacity was reserved at
+        admission."""
+        if not self.incremental:
+            return state, True
+        need = self.pages_for(length)
+        have = len(self._slot_pages[slot])
+        if need <= have:
+            return state, True
+        got = self.allocator.alloc(need - have)
+        if got is None:
+            return state, False
+        self._slot_pages[slot].extend(got)
+        row = np.full((self.pages_per_slot,), -1, np.int32)
+        row[:len(self._slot_pages[slot])] = self._slot_pages[slot]
+        state = dict(state)
+        state["block_table"] = self._set_table_row(
+            state["block_table"], jnp.asarray(slot, jnp.int32),
+            jnp.asarray(row))
+        return state, True
 
     def prefill_into_slot(self, state: dict, prompt, slot: int,
                           extras: Optional[dict] = None,
@@ -405,9 +491,11 @@ class Engine:
         mid-stream admission cannot perturb already-decoding requests.
 
         In the paged layout the slot additionally claims
-        ``pages_needed(len(prompt), max_new)`` pages from the pool (callers
+        ``initial_pages(len(prompt), max_new)`` pages from the pool (callers
         gate on ``can_admit``) and the prefilled KV is scattered into those
-        pages instead of a contiguous row.
+        pages instead of a contiguous row; under incremental growth the
+        claim covers only prompt + one speculative block, and the scheduler
+        calls ``ensure_capacity`` before each step as the slot grows.
 
         Returns (new_state, first_token, last_pos): the prefill already
         commits one token (new_count starts at 1 for the slot)."""
@@ -421,7 +509,7 @@ class Engine:
             if self._slot_pages[slot]:
                 raise RuntimeError(f"slot {slot} still holds pages; "
                                    "free_slot it before re-admission")
-            n = self.pages_needed(int(prompt.shape[1]), max_new)
+            n = self.initial_pages(int(prompt.shape[1]), max_new)
             pages = self.allocator.alloc(n)
             if pages is None:
                 raise RuntimeError(
@@ -466,6 +554,12 @@ class Engine:
 
     def _paged_free_impl(self, state, slot):
         core = {k: v for k, v in state.items() if k != "block_table"}
+        # blank the freed pages' position slots: incremental growth recycles
+        # pages into other slots' tables without an admission overwrite, so
+        # a free page must read as empty (cache_ops.blank_pages)
+        row = jax.lax.dynamic_index_in_dim(state["block_table"], slot,
+                                           keepdims=False)
+        core = cache_ops.blank_pages(core, row, self.pspec)
         core = cache_ops.reset_slot(
             core, slot, self.paged_axes,
             fills={"new_count": self.ecfg.max_new_tokens})

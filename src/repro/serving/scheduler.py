@@ -1,21 +1,51 @@
-"""Per-slot continuous batching scheduler — the framework's request-lifecycle
-layer over serving/engine.py (what vLLM's scheduler is to its model runner,
-and what the paper's deployed-serving numbers §5.4 implicitly rely on).
+"""Event-driven continuous-batching scheduler — the framework's
+request-lifecycle layer over serving/engine.py (what vLLM's scheduler is to
+its model runner, and what the paper's deployed-serving numbers §5.4
+implicitly rely on).
 
 Request lifecycle::
 
-    QUEUED ──admit──► PREFILLING ──► DECODING ──EOS / budget──► FINISHED
-              ▲                                      │
-              └────────── slot freed, next request ──┘
+    QUEUED ──arrive──► (eligible) ──admit──► PREFILLING ──► DECODING ──┐
+      ▲                                          ▲                    │
+      │                                          │            EOS / budget
+      └────────── preempted (pages freed, ───────┘                    │
+                  tokens kept host-side)                          FINISHED
 
 The engine's decode state is a fixed-shape batch of B *slots*; every
 speculative iteration steps all B rows under a per-slot active mask. When a
 request finishes (per-request ``max_new_tokens`` budget or EOS), its slot is
-freed *immediately* — mid-stream — and the next queued request is prefilled
+freed *immediately* — mid-stream — and the next eligible request is prefilled
 straight into the live batch (``Engine.prefill_into_slot``), not held until
-the whole batch drains. This is what separates continuous batching from the
-old round-based ``serve_round_based`` baseline, which refills only between
-full generation rounds and so pays the max-straggler latency every round.
+the whole batch drains.
+
+Arrival times and the virtual clock
+-----------------------------------
+Requests carry an ``arrival_time`` (virtual time units). The scheduler runs a
+deterministic, step-cost-driven **virtual clock**: every dispatched
+speculative iteration advances it by ``iter_cost``, every admission prefill
+by ``prefill_cost``, and when nothing is live the clock jumps to the next
+arrival. No request is admitted before its arrival; among arrived requests
+admission is FIFO by ``(arrival_time, submission order)`` with head-of-line
+blocking (when the head doesn't fit the page pool the scheduler waits for
+frees — or preempts — rather than admitting around it). Because the clock is
+derived from step counts, not wall time, async traces replay bit-identically
+on CPU test runs; wall-clock metrics are kept alongside for throughput.
+
+Preemption (paged layout)
+-------------------------
+Under incremental page growth (``EngineConfig(kv_growth="incremental")``) a
+slot claims pages only as its length crosses page boundaries, so the pool can
+genuinely run out mid-decode. When growth fails — or when the queue head
+would starve behind lower-priority runners — the lowest-priority running slot
+(latest ``(arrival_time, submission)``) is evicted: its pages return to the
+pool and its prompt + generated tokens are retained host-side. It is later
+re-admitted by **recompute-prefill** (prompt + generated-so-far becomes the
+new prefill), which with greedy verification is token-for-token lossless —
+greedy speculative output is a pure function of the prefix, so the resumed
+stream continues exactly where the evicted one stopped
+(tests/test_async_serving.py pins this per family). Re-admission of a
+preempted request gates on its *full* remaining need so the same pressure
+cannot immediately re-evict it.
 
 Row independence is the correctness backbone: attention, cache updates, and
 verification are all per-row, so admitting into slot *i* cannot change what
@@ -33,21 +63,24 @@ Quickstart::
 
     eng = Engine(tcfg, dcfg, tparams, dparams, EngineConfig(...), batch=4)
     sched = Scheduler(eng, eos_id=None)
-    report = sched.serve([Request(prompt) for prompt in prompts])
-    report["otps"], report["results"][0]["tokens"], ...
+    report = sched.serve([Request(p, arrival_time=t) for p, t in work])
+    report["otps"], report["p99_latency_vt"], report["results"][0]["tokens"]
 """
 from __future__ import annotations
 
+import bisect
 import itertools
 import time
+import zlib
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import make_extras
 from repro.serving.engine import Engine
 
 QUEUED = "queued"
@@ -62,9 +95,18 @@ _rid_counter = itertools.count()
 class Request:
     """One generation request. ``prompt`` is a 1-D int32 token array; the
     prefill commits the first generated token, which counts toward
-    ``max_new_tokens`` (None = the engine's default budget)."""
+    ``max_new_tokens`` (None = the engine's default budget).
+
+    ``arrival_time`` is in virtual time units — the scheduler will not admit
+    the request before its arrival. ``extras`` carries per-request modality
+    inputs (vision embeds / encoder embeds, leading batch axis 1, as built
+    by ``models.make_extras(cfg, 1, "prefill", key)``); for vlm/encdec
+    targets without explicit extras a deterministic stub (keyed by the
+    prompt bytes) is synthesized at admission."""
     prompt: Any
     max_new_tokens: Optional[int] = None
+    arrival_time: float = 0.0
+    extras: Optional[dict] = None
     rid: int = field(default_factory=lambda: next(_rid_counter))
     # lifecycle (managed by the scheduler)
     status: str = QUEUED
@@ -74,25 +116,34 @@ class Request:
     t_submit: float = 0.0
     t_admit: float = 0.0
     t_finish: float = 0.0
+    vt_admit: Optional[float] = None   # virtual clock at first admission
+    vt_finish: float = 0.0
+    n_preempt: int = 0
     iters: int = 0                 # decode iterations this request was live
     # internal bookkeeping
     _prev_new: int = 0             # device-side new_count at last sync
     _prev_last: int = 0            # device-side last position at last sync
+    _iters_base: int = 0           # iters accumulated before the last resume
+    _committed: int = 0            # tokens committed across all admissions
+    _prefills: int = 0             # prefill-committed tokens (1 + resumes)
+    _seq: int = 0                  # submission index (FIFO tie-break)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
         if self.prompt.size == 0:
             raise ValueError("empty prompt")
+        if not (self.arrival_time >= 0.0 and np.isfinite(self.arrival_time)):
+            raise ValueError(f"bad arrival_time {self.arrival_time!r}")
 
     @property
     def acceptance_length(self) -> float:
-        """Mean tokens committed per decode iteration (prefill token
-        excluded) — the paper's AL, per request."""
-        return (self._prev_new - 1) / max(self.iters, 1)
+        """Mean tokens committed per decode iteration (prefill-committed
+        tokens excluded, one per admission) — the paper's AL, per request."""
+        return (self._committed - self._prefills) / max(self.iters, 1)
 
 
 class Scheduler:
-    """Continuous-batching loop over an Engine's B slots.
+    """Event-driven continuous-batching loop over an Engine's B slots.
 
     ``eos_id`` — token id that terminates a request (output trimmed at the
     first occurrence, which the losslessness tests rely on being identical
@@ -102,40 +153,62 @@ class Scheduler:
     ``sync_every`` — speculative iterations dispatched between host syncs.
     1 gives the most responsive admission/EOS handling; higher values let jax
     pipeline dispatch (the whole-batch Engine.run polls every 8) at the cost
-    of slots idling up to sync_every-1 iterations after finishing. Outputs
+    of slots idling up to sync_every-1 iterations after finishing, and of
+    page growth reserving capacity for the whole block up front. Outputs
     are identical either way: per-slot budgets freeze rows ON DEVICE, and
     EOS/budget trimming is positional, not timing-dependent.
+
+    ``iter_cost`` / ``prefill_cost`` — virtual-clock cost of one speculative
+    iteration / one admission prefill. The defaults (1.0 each) make the clock
+    an iteration counter; scale them to calibrated step times to model a
+    specific accelerator without losing determinism.
+
+    ``preempt`` — evict the lowest-priority running slot when the page pool
+    is exhausted (growth failure or queue-head starvation), resuming later by
+    recompute-prefill. Default: enabled iff verification is greedy (the
+    recompute resume is lossless only for greedy; pass ``preempt=False``
+    for sampled decoding, which then stalls instead of evicting).
     """
 
     def __init__(self, engine: Engine, eos_id: Optional[int] = None,
-                 free_on_finish: bool = True, sync_every: int = 1):
+                 free_on_finish: bool = True, sync_every: int = 1,
+                 iter_cost: float = 1.0, prefill_cost: float = 1.0,
+                 preempt: Optional[bool] = None):
         self.engine = engine
         self.eos_id = eos_id
         self.free_on_finish = free_on_finish
         self.sync_every = max(int(sync_every), 1)
-        if engine.tcfg.family in ("vlm", "encdec"):
-            raise NotImplementedError(
-                "per-slot admission needs per-request extras; vlm/encdec "
-                "targets are not yet supported by the scheduler")
+        self.iter_cost = float(iter_cost)
+        self.prefill_cost = float(prefill_cost)
+        if preempt is None:
+            preempt = engine.ecfg.greedy
+        elif preempt and not engine.ecfg.greedy:
+            raise ValueError(
+                "preemption resumes by recompute-prefill, which is lossless "
+                "only under greedy verification; pass preempt=False for "
+                "sampled decoding")
+        self.preempt = bool(preempt)
 
     # ------------------------------------------------------------------
     def serve(self, requests: Sequence, rng: Optional[jax.Array] = None,
               max_iters: int = 100_000) -> Dict[str, Any]:
         """Run every request to completion; returns aggregate + per-request
-        metrics. ``requests`` entries may be Request objects or raw prompt
-        arrays (coerced with the engine's default budget)."""
+        metrics (wall-clock and virtual-time). ``requests`` entries may be
+        Request objects or raw prompt arrays (coerced with the engine's
+        default budget, arrival 0)."""
         eng = self.engine
         B = eng.batch
         default_budget = eng.ecfg.max_new_tokens
 
         reqs = [r if isinstance(r, Request) else Request(r) for r in requests]
         t_start = time.perf_counter()
-        for r in reqs:
-            if r.status != QUEUED:
+        for i, r in enumerate(reqs):
+            if r.status != QUEUED or r.out_tokens:
                 raise ValueError(
                     f"request {r.rid} is {r.status}; Request objects are "
                     "single-use — submit a fresh one")
             r.t_submit = t_start
+            r._seq = i
             if r.max_new_tokens is None:
                 r.max_new_tokens = default_budget
             # prompt + budget + worst-case speculative overshoot must fit the
@@ -154,7 +227,14 @@ class Scheduler:
                         f"request {r.rid}: needs {n} KV pages but the pool "
                         f"only has {eng.pool_pages}; it could never be "
                         "admitted")
-        queue = deque(reqs)
+
+        def prio(r: Request) -> Tuple[float, int]:
+            return (r.arrival_time, r._seq)
+
+        pending = deque(sorted(reqs, key=prio))   # not yet arrived
+        waiting: List[Request] = []               # arrived, sorted by prio
+        clock = 0.0
+        events: List[Tuple[float, str, int]] = []
 
         state = eng.blank_state(rng)
         active = np.zeros((B,), bool)
@@ -162,19 +242,53 @@ class Scheduler:
         slot_req: List[Optional[Request]] = [None] * B
         finished: List[Request] = []
         n_iters = 0
+        n_preempt_total = 0
 
         def finish(s: int):
+            nonlocal state
             req = slot_req[s]
             req.status = FINISHED
             req.t_finish = time.perf_counter()
+            req.vt_finish = clock
             active[s] = False
             slot_req[s] = None
             finished.append(req)
+            events.append((clock, "finish", req.rid))
             # paged engines MUST free (pages return to the pool); contiguous
             # freeing is cosmetic and stays opt-out
             if self.free_on_finish or eng.paged:
-                nonlocal state
                 state = eng.free_slot(state, s)
+
+        def preempt_slot(s: int):
+            """Evict slot s: pages freed, prompt + generated tokens retained
+            host-side; the request re-enters the queue at its original
+            priority for a recompute-prefill resume."""
+            nonlocal state, n_preempt_total
+            req = slot_req[s]
+            req.status = QUEUED
+            req.slot = None
+            req.n_preempt += 1
+            req._iters_base = req.iters
+            n_preempt_total += 1
+            active[s] = False
+            slot_req[s] = None
+            state = eng.free_slot(state, s)
+            bisect.insort(waiting, req, key=prio)
+            events.append((clock, "preempt", req.rid))
+
+        def lowest_prio_active() -> Optional[int]:
+            live = [s for s in range(B) if active[s]]
+            if not live:
+                return None
+            return max(live, key=lambda s: prio(slot_req[s]))
+
+        def head_admissible(req: Request) -> bool:
+            # resumed requests gate on their full remaining need (anti-
+            # thrash: a victim must not be re-evicted by the pressure that
+            # evicted it); fresh ones on the initial claim only
+            plen = req.prompt.size + len(req.out_tokens)
+            rem = req.max_new_tokens - len(req.out_tokens)
+            return eng.can_admit(plen, rem, full=req.n_preempt > 0)
 
         def clip_and_check_done(req: Request) -> bool:
             """Trim at EOS / budget; True when the request is complete."""
@@ -188,46 +302,130 @@ class Scheduler:
                 done = True
             return done
 
-        while queue or active.any():
-            # ---- admission: prefill queued requests into free slots -------
-            # (FIFO: when the head request doesn't fit the page pool we wait
-            # for frees rather than admit around it)
-            for s in range(B):
-                if active[s] or not queue:
-                    continue
-                if not eng.can_admit(queue[0].prompt.size,
-                                     queue[0].max_new_tokens):
-                    break
-                req = queue.popleft()
-                req.status = PREFILLING
-                req.slot = s
+        def admit(req: Request, s: int):
+            nonlocal state, clock
+            # recompute-prefill resume: the prefix is prompt + everything
+            # generated before eviction; greedy continuation from that
+            # prefix is exactly the uninterrupted stream
+            prompt = (np.concatenate([req.prompt,
+                                      np.asarray(req.out_tokens, np.int32)])
+                      if req.out_tokens else req.prompt)
+            remaining = req.max_new_tokens - len(req.out_tokens)
+            req.status = PREFILLING
+            req.slot = s
+            if req.vt_admit is None:
+                req.vt_admit = clock
                 req.t_admit = time.perf_counter()
-                state, first, last = eng.prefill_into_slot(
-                    state, req.prompt, s, max_new=req.max_new_tokens)
-                req.out_tokens.append(first)
-                req._prev_new, req._prev_last = 1, last
-                req.status = DECODING
-                slot_req[s] = req
-                active[s] = True
-                max_new[s] = req.max_new_tokens
-                if clip_and_check_done(req):     # EOS at the very first token
-                    finish(s)
+            extras = req.extras
+            if extras is None and eng.tcfg.family in ("vlm", "encdec"):
+                # deterministic stub frontend inputs keyed by the PROMPT
+                # (not the process-global rid), so re-serving the same
+                # workload with fresh Request objects replays identical
+                # extras; cached on the request so a preemption resume
+                # (longer recompute prompt) also replays them
+                seed = zlib.crc32(req.prompt.tobytes()) & 0x7FFFFFFF
+                extras = make_extras(eng.tcfg, 1, "prefill",
+                                     jax.random.fold_in(jax.random.PRNGKey(0),
+                                                        seed))
+                req.extras = extras
+            events.append((clock, "admit", req.rid))
+            state, first, last = eng.prefill_into_slot(
+                state, prompt, s, extras=extras, max_new=remaining)
+            clock += self.prefill_cost
+            req.out_tokens.append(first)
+            req._committed += 1
+            req._prefills += 1
+            req._prev_new, req._prev_last = 1, last
+            req.status = DECODING
+            slot_req[s] = req
+            active[s] = True
+            max_new[s] = remaining
+            if clip_and_check_done(req):     # EOS at the very first token
+                finish(s)
+
+        while pending or waiting or active.any():
+            # ---- arrivals: move everything whose time has come -----------
+            while pending and pending[0].arrival_time <= clock + 1e-9:
+                r = pending.popleft()
+                bisect.insort(waiting, r, key=prio)
+                events.append((r.arrival_time, "arrive", r.rid))
+            # ---- idle: nothing eligible, nothing running → jump the clock
+            if not waiting and not active.any():
+                clock = max(clock, pending[0].arrival_time)
+                continue
+
+            # ---- admission: eligible requests into free slots, FIFO by
+            # (arrival, submission) with head-of-line blocking; preemption
+            # resolves starvation when the head outranks a runner. Free
+            # slots are recomputed per admission — a slot freed by a
+            # preemption (or an EOS-at-prefill) is reusable immediately,
+            # not after the next sync block ------------------------------
+            while waiting:
+                free = [s for s in range(B) if not active[s]
+                        and slot_req[s] is None]
+                if not free:
+                    break
+                head = waiting[0]
+                if not head_admissible(head):
+                    if self.preempt:
+                        while not head_admissible(head):
+                            v = lowest_prio_active()
+                            if v is None or prio(slot_req[v]) <= prio(head):
+                                break
+                            preempt_slot(v)
+                    if not head_admissible(head):
+                        break                # head waits for frees (FIFO)
+                admit(waiting.pop(0), free[0])
 
             if not active.any():
-                if queue and not eng.can_admit(queue[0].prompt.size,
-                                               queue[0].max_new_tokens):
+                if waiting:
                     raise RuntimeError(
                         "no active slot and the head request cannot be "
                         "admitted — page pool leak?")
-                continue                         # everything died at prefill
+                continue                     # everything died at prefill
+
+            # ---- capacity: grow each live slot to cover the coming sync
+            # block (incremental paged growth); on pool exhaustion preempt
+            # the lowest-priority slot, or stall when preemption is off ----
+            stalled = np.zeros((B,), bool)
+            if eng.incremental:
+                by_prio = sorted(np.flatnonzero(active),
+                                 key=lambda s: prio(slot_req[s]))
+                for s in by_prio:
+                    if not active[s]:        # already evicted this pass
+                        continue
+                    req = slot_req[s]
+                    cap = (req.prompt.size + eng.pos_offset
+                           + req.max_new_tokens + eng.ecfg.K + 1)
+                    # a step at position c writes KV c..c+stride-1 and moves
+                    # c by at most stride, so sync_every steps need length
+                    # last + sync_every*stride, exactly
+                    target = min(req._prev_last
+                                 + self.sync_every * eng.commit_stride, cap)
+                    state, ok = eng.ensure_capacity(state, int(s), target)
+                    while not ok and self.preempt:
+                        v = lowest_prio_active()
+                        preempt_slot(v)
+                        if v == s:
+                            break
+                        state, ok = eng.ensure_capacity(state, int(s), target)
+                    if not ok and active[s]:
+                        stalled[s] = True    # retry once pages free up
+            run = active & ~stalled
+            if not run.any():
+                raise RuntimeError(
+                    "page pool exhausted and every live slot is stalled; "
+                    "enable preemption (Scheduler(preempt=True)) or grow "
+                    "pool_pages")
 
             # ---- speculative iterations over all live slots ---------------
             # (several per sync when sync_every > 1 — jax pipelines the
             # dispatches; budget freezes happen on device regardless)
-            act_dev, mn_dev = jnp.asarray(active), jnp.asarray(max_new)
+            act_dev, mn_dev = jnp.asarray(run), jnp.asarray(max_new)
             for _ in range(self.sync_every):
                 state = eng.step(state, act_dev, mn_dev)
                 n_iters += 1
+                clock += self.iter_cost
             if n_iters > max_iters:
                 raise RuntimeError("scheduler exceeded max_iters")
 
@@ -240,31 +438,40 @@ class Scheduler:
                 req = slot_req[s]
                 if req is None or not active[s]:
                     continue
-                req.iters = int(slot_iters[s])   # device-exact (freeze-aware)
+                req.iters = req._iters_base + int(slot_iters[s])
                 if new_count[s] > req._prev_new:
                     req.out_tokens.extend(
                         tokens[s, req._prev_last + 1:last[s] + 1].tolist())
+                    req._committed += int(new_count[s]) - req._prev_new
                     req._prev_new = int(new_count[s])
                     req._prev_last = int(last[s])
                 if clip_and_check_done(req):
                     finish(s)
 
         wall = time.perf_counter() - t_start
-        return self._report(finished, wall, n_iters)
+        return self._report(finished, wall, n_iters, clock, events,
+                            n_preempt_total)
 
     # ------------------------------------------------------------------
-    def _report(self, finished: List[Request], wall: float,
-                n_iters: int) -> Dict[str, Any]:
+    def _report(self, finished: List[Request], wall: float, n_iters: int,
+                makespan_vt: float, events: List[Tuple[float, str, int]],
+                n_preempt: int) -> Dict[str, Any]:
         results = [{
             "rid": r.rid,
             "tokens": np.asarray(r.out_tokens, np.int32),
             "n_new": len(r.out_tokens),
             "iters": r.iters,
             "acceptance_length": r.acceptance_length,
+            "arrival_time": r.arrival_time,
+            "n_preempt": r.n_preempt,
             "wait_s": r.t_admit - r.t_submit,
             "latency_s": r.t_finish - r.t_submit,
+            "wait_vt": r.vt_admit - r.arrival_time,
+            "latency_vt": r.vt_finish - r.arrival_time,
         } for r in sorted(finished, key=lambda r: r.rid)]
         total = sum(r["n_new"] for r in results)
+        lat_vt = [r["latency_vt"] for r in results] or [0.0]
+        wait_vt = [r["wait_vt"] for r in results] or [0.0]
         return {
             "results": results,
             "n_requests": len(results),
@@ -276,6 +483,15 @@ class Scheduler:
                 [r["acceptance_length"] for r in results])) if results else 0.0,
             "mean_latency_s": float(np.mean(
                 [r["latency_s"] for r in results])) if results else 0.0,
+            # virtual-time (deterministic) latency profile + churn trace
+            "makespan_vt": makespan_vt,
+            "otps_vt": total / max(makespan_vt, 1e-9),
+            "preemptions": n_preempt,
+            "p50_latency_vt": float(np.percentile(lat_vt, 50)),
+            "p99_latency_vt": float(np.percentile(lat_vt, 99)),
+            "p50_wait_vt": float(np.percentile(wait_vt, 50)),
+            "p99_wait_vt": float(np.percentile(wait_vt, 99)),
+            "events": events,
         }
 
 

@@ -307,6 +307,33 @@ def test_prefill_retrace_bound_chunked():
     assert eng._prefill_pad._cache_size() == 0
 
 
+def test_incremental_growth_retrace_bound():
+    """Decode-time ``ensure_capacity`` must not add jit traces per page
+    count: the block-table row update is ONE trace for every (slot, page
+    count) combination — slot index and the full-width row are both traced
+    — and the paged step itself never retraces. A workload whose slots
+    cross page boundaries at many distinct counts pins the bound."""
+    eng = fresh_engine("dense", kv_layout="paged")
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(1, eng.tcfg.vocab_size - 2,
+                            size=int(n)).astype(np.int32)
+               for n in (3, 5, 7, 4, 6, 2)]
+    budgets = [8, 6, 4, 8, 5, 7]
+    rep = Scheduler(eng).serve([Request(p, max_new_tokens=b)
+                                for p, b in zip(prompts, budgets)])
+    assert rep["n_requests"] == len(prompts)
+    # exactly one growth trace — and at least one (the workload really did
+    # cross page boundaries; 0 would mean the bound wasn't exercised)
+    assert eng._set_table_row._cache_size() == 1
+    assert eng._paged_step._cache_size() <= 1
+    assert eng_pool_restored(eng)
+    # upfront growth never touches the growth path at all
+    up = fresh_engine("dense", kv_layout="paged", kv_growth="upfront")
+    Scheduler(up).serve([Request(p, max_new_tokens=b)
+                         for p, b in zip(prompts, budgets)])
+    assert up._set_table_row._cache_size() == 0
+
+
 def test_prefill_buckets_decomposition():
     assert Engine.prefill_buckets(1) == [1]
     assert Engine.prefill_buckets(8) == [8]

@@ -20,7 +20,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.configs import DrafterConfig, get_config
 from repro.core import drafter as D
-from repro.models import get_model
+from repro.models import get_model, make_extras
 from repro.serving import Engine, EngineConfig, Request, Scheduler
 
 KEY = jax.random.PRNGKey(11)
@@ -210,37 +210,44 @@ def test_random_workload_invariants_paged(n_requests, budget, seed):
 
 
 # ---------------------------------------------------------------------------
-# vlm/encdec admission: pinned NotImplementedError (ROADMAP extras plumbing)
+# vlm/encdec admission: per-request extras plumbed through the scheduler
 # ---------------------------------------------------------------------------
 
 @lru_cache(maxsize=None)
-def _unsupported_engine(arch):
+def _modality_engine(arch, batch=2):
     tcfg = get_config(arch).reduced()
     m = get_model(tcfg)
     return Engine(tcfg, None, m.init(KEY), None,
-                  EngineConfig(K=0, max_new_tokens=4, drafter_mode="none",
-                               max_len=64), 2)
+                  EngineConfig(K=0, max_new_tokens=6, drafter_mode="none",
+                               max_len=64), batch)
 
 
 @pytest.mark.parametrize("arch", ["internvl2-1b", "whisper-base"])
-def test_vlm_encdec_admission_error_message(arch):
-    """The scheduler refuses vlm/encdec targets with the exact message the
-    ROADMAP follow-up will delete — pin it so the refusal can't silently
-    drift while admission still lacks per-request extras."""
-    with pytest.raises(NotImplementedError,
-                       match="per-slot admission needs per-request extras"):
-        Scheduler(_unsupported_engine(arch))
-
-
-@pytest.mark.parametrize("arch", ["internvl2-1b", "whisper-base"])
-@pytest.mark.xfail(raises=NotImplementedError, strict=True,
-                   reason="ROADMAP: per-request extras plumbing for "
-                          "vlm/encdec scheduler admission — turn me green")
 def test_vlm_encdec_scheduler_serve(arch):
-    """The red test the extras-plumbing follow-up turns green: serving a
-    vlm/encdec request through the continuous scheduler end-to-end."""
-    eng = _unsupported_engine(arch)
+    """Formerly the strict-xfail red test for the ROADMAP extras follow-up:
+    serving a vlm/encdec request through the continuous scheduler end-to-end
+    (extras default to a deterministic per-prompt stub frontend)."""
+    eng = _modality_engine(arch)
     rep = Scheduler(eng).serve(
         [Request(np.asarray([3, 4, 5], np.int32), max_new_tokens=2)])
     assert rep["n_requests"] == 1
     assert rep["results"][0]["n_new"] == 2
+
+
+@pytest.mark.parametrize("arch", ["internvl2-1b", "whisper-base"])
+def test_vlm_encdec_extras_match_whole_batch(arch):
+    """Explicit per-request extras through per-slot admission must reproduce
+    the whole-batch Engine.run with the same extras token-for-token — the
+    extras really reach the frontend, they aren't dropped."""
+    tcfg = get_config(arch).reduced()
+    extras = make_extras(tcfg, 1, "prefill", jax.random.fold_in(KEY, 5))
+    prompt = np.asarray([7, 9, 11, 2], np.int32)
+    solo = Engine(tcfg, None, get_model(tcfg).init(KEY), None,
+                  EngineConfig(K=0, max_new_tokens=5, drafter_mode="none",
+                               max_len=64), 1)
+    ref = solo.run(prompt[None], extras)
+    P = prompt.size + solo.pos_offset
+    want = np.asarray(ref["tokens"])[0, P:P + 5]
+    rep = Scheduler(_modality_engine(arch)).serve(
+        [Request(prompt, max_new_tokens=5, extras=extras)])
+    np.testing.assert_array_equal(rep["results"][0]["tokens"], want)
