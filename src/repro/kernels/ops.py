@@ -77,13 +77,28 @@ def decode_attention(q, k, v, k_positions, q_positions, *, scale, window=0,
                                 interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("scale", "window", "interpret"))
+@partial(jax.jit, static_argnames=("scale", "window", "interpret", "mesh"))
 def paged_decode_attention(q, k_pool, v_pool, pos_pool, block_table,
-                           q_positions, *, scale, window=0, interpret=None):
+                           q_positions, *, scale, window=0, interpret=None,
+                           mesh=None):
     """Paged-KV decode: K/V in a (NP, page, KV, hd) pool, per-row
     (B, nb) block tables (-1 = unallocated). The page is the DMA tile, so
-    no pad-to-block is needed — pool and tables are already page-granular."""
+    no pad-to-block is needed — pool and tables are already page-granular.
+
+    ``mesh``: pass the serving mesh when the pools are storage-sharded
+    (EngineConfig(shard_model=True)). Pallas calls are SPMD-opaque — GSPMD
+    cannot partition a kernel body — so sharded operands must be gathered
+    *before* the call; the replication pin here makes that boundary
+    explicit (and bitwise-exact: it is pure data movement) instead of
+    leaving the gather to propagation at an unspecified point. The sharded
+    engine's jnp twin (cache_ops.gather_state) pins the same boundary."""
     interpret = _default_interpret() if interpret is None else interpret
+    if mesh is not None:
+        repl = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec())
+        q, k_pool, v_pool, pos_pool, block_table, q_positions = (
+            jax.lax.with_sharding_constraint(x, repl)
+            for x in (q, k_pool, v_pool, pos_pool, block_table, q_positions))
     return _dk.paged_decode_attention(q, k_pool, v_pool, pos_pool,
                                       block_table, q_positions, scale=scale,
                                       window=window, interpret=interpret)

@@ -15,6 +15,14 @@ report virtual-time p50/p99 latency and queue wait plus preemption counts.
 vlm/encdec targets serve through the scheduler like everything else —
 per-request frontend extras (vision/encoder embeds) are synthesized as
 deterministic stubs at admission.
+
+``--shard-model N`` serves model-sharded: weights and full-length KV (page
+pools included) are storage-sharded over a 1-D ``("model",)`` mesh of N
+devices, token-for-token identical to the single-device engine (see
+docs/sharding.md). On this CPU container, force host devices first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.serve --shard-model 8 ...
 """
 from __future__ import annotations
 
@@ -29,6 +37,7 @@ from repro.core import drafter as D
 from repro.models import get_model
 from repro.serving import (Engine, EngineConfig, Request, Scheduler,
                            serve_round_based)
+from repro.sharding.utils import serving_mesh
 
 
 def main():
@@ -70,7 +79,16 @@ def main():
     ap.add_argument("--no-preempt", action="store_true",
                     help="never evict a running slot on pool exhaustion; "
                          "slots stall until pages free up")
+    ap.add_argument("--shard-model", type=int, default=0, metavar="N",
+                    help="storage-shard weights + full-length KV over a 1-D "
+                         "(model,) mesh of N devices (0 = single-device); "
+                         "lossless — output is token-for-token identical")
     args = ap.parse_args()
+    if args.shard_model > jax.device_count():
+        raise SystemExit(
+            f"--shard-model {args.shard_model} needs {args.shard_model} "
+            f"devices but jax sees {jax.device_count()}; on CPU set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N first")
 
     reduced = args.reduced or jax.default_backend() != "tpu"
     tcfg = get_config(args.arch)
@@ -92,6 +110,7 @@ def main():
             print(f"no checkpoint ({e}); using random drafter")
             dparams = tmpl
 
+    mesh = serving_mesh(args.shard_model) if args.shard_model else None
     eng = Engine(tcfg, dcfg, tparams, dparams,
                  EngineConfig(K=args.k, max_new_tokens=args.max_new,
                               drafter_mode=args.mode, max_len=256,
@@ -99,8 +118,13 @@ def main():
                               page_size=args.page_size,
                               pool_pages=args.pool_pages,
                               bucket_prefill=not args.no_bucket,
-                              kv_growth=args.kv_growth),
+                              kv_growth=args.kv_growth,
+                              shard_model=args.shard_model > 0, mesh=mesh),
                  args.batch)
+    if mesh is not None:
+        print(f"model-sharded over {mesh.shape['model']} devices "
+              f"(mesh axes {mesh.axis_names}); storage-sharded weights + "
+              "KV pools, replicated compute — lossless")
     rng = np.random.default_rng(3)
     # varied prompt lengths exercise bucketed admission; the round-based
     # baseline prefills whole batches, so give it equal lengths to compare

@@ -19,7 +19,6 @@ the mesh context.
 """
 from __future__ import annotations
 
-import contextlib
 import functools
 import math
 from typing import Optional
@@ -38,28 +37,13 @@ from repro.optim import adamw_init, adamw_update, apply_updates, \
 from repro.serving.engine import EngineConfig, make_decode_state, \
     speculative_step
 from repro.sharding.rules import cache_specs, param_specs
-from repro.sharding.utils import spec_for
+from repro.sharding.utils import mesh_scope, spec_for
 from repro.training.trainer import TrainConfig
 
 
-def mesh_context(mesh):
-    """Enter the mesh so shard_hint / spec_for see it during tracing."""
-    if hasattr(jax, "set_mesh"):
-        return jax.set_mesh(mesh)       # context manager in jax >= 0.7
-    if hasattr(jax.sharding, "use_mesh"):
-        return jax.sharding.use_mesh(mesh)
-    return _legacy_mesh_context(mesh)   # jax 0.4.x: physical Mesh context
-
-
-@contextlib.contextmanager
-def _legacy_mesh_context(mesh):
-    from repro.sharding import utils as SU
-    SU._FALLBACK_MESH.append(mesh)
-    try:
-        with mesh:                      # resource env for bare-P constraints
-            yield mesh
-    finally:
-        SU._FALLBACK_MESH.pop()
+# canonical implementation lives in sharding/utils.py (the serving engine
+# needs it too); re-exported here under its historical launcher name
+mesh_context = mesh_scope
 
 
 def batch_spec(mesh, *trailing):

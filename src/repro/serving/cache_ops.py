@@ -179,6 +179,12 @@ class BlockAllocator:
         return len(self._used)
 
     def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` page ids off the free list (LIFO — freshly freed pages
+        are reused first, which keeps the working set compact).
+
+        Returns the page ids, or None — allocating *nothing* — when fewer
+        than ``n`` pages are free, so a caller can atomically wait/preempt
+        instead of holding a partial claim. Raises on negative ``n``."""
         if n < 0:
             raise ValueError(f"alloc({n})")
         if n > len(self._free):
@@ -189,6 +195,9 @@ class BlockAllocator:
         return pages
 
     def free(self, pages: List[int]) -> None:
+        """Return ``pages`` to the pool. Raises on a page that is not
+        currently allocated (double-free or foreign id) — silent aliasing
+        would corrupt a neighbouring request's KV."""
         for p in pages:
             if p not in self._used:
                 raise ValueError(f"free of page {p} not currently allocated")

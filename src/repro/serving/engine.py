@@ -14,6 +14,15 @@ Three drafter modes:
 Verification is greedy (prefix match) or lossless rejection sampling.
 Greedy + "parallel"/"ar" reproduces target-greedy output exactly — the
 losslessness property tests rely on this.
+
+Model sharding (``EngineConfig(shard_model=True)``) spreads the engine's
+resident state — weights and full-length KV, contiguous rows or page pools
+alike — over a 1-D ``("model",)`` device mesh while the scheduler's host
+loop is unchanged. Every jitted entry point carries explicit NamedSharding
+in/out shardings, and each compute step gathers the sharded storage at a
+replication boundary (sharding/utils.replicate_tree) before running
+bit-identically to the single-device engine; see docs/sharding.md for the
+losslessness argument and layout table.
 """
 from __future__ import annotations
 
@@ -24,18 +33,37 @@ from typing import Any, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import DrafterConfig, ModelConfig
 from repro.core import drafter as D
 from repro.core import spec_decode as SD
 from repro.models import get_model
 from repro.serving import cache_ops
+from repro.sharding import rules as shard_rules
+from repro.sharding.utils import replicate_tree, serving_mesh
 
 Array = jax.Array
 
 
 @dataclass(frozen=True)
 class EngineConfig:
+    """Static configuration of a serving :class:`Engine`.
+
+    Attributes:
+      K: speculation depth — tokens drafted per iteration (ignored when
+        ``drafter_mode == "none"``).
+      max_new_tokens: default per-request generation budget; the scheduler
+        may override it per request (``Request.max_new_tokens``).
+      greedy: greedy prefix-match verification (token-for-token lossless vs
+        target-greedy decoding) when True; lossless rejection sampling when
+        False (preemption is then unavailable — see Scheduler).
+      drafter_mode: "parallel" (P-EAGLE), "ar" (EAGLE-3 baseline) or "none"
+        (vanilla AR decoding, one target forward per token).
+      cache_dtype: KV/state cache dtype ("bfloat16" on accelerators).
+      max_len: total cache positions per slot (prompt + generation + K+1
+        speculative overshoot must fit).
+    """
     K: int = 5                       # speculation depth (drafted tokens/iter)
     max_new_tokens: int = 64
     greedy: bool = True
@@ -67,6 +95,17 @@ class EngineConfig:
     # entries — split the prompt into its MSB-first power-of-two chunks.
     # Exactness across both paths is pinned by the cross-layout tests.
     bucket_prefill: bool = True
+    # --- model sharding --------------------------------------------------
+    # shard_model=True spreads weights and full-length KV (contiguous rows
+    # or page pools) over ``mesh`` — a 1-D ("model",) jax Mesh, defaulting
+    # to sharding/utils.serving_mesh() over every local device. Storage
+    # shards; compute stays replicated behind an explicit gather boundary,
+    # which is what keeps the sharded engine token-for-token identical to
+    # the single-device one (docs/sharding.md). Block tables and the
+    # BlockAllocator stay host-side/replicated, so incremental page growth
+    # and preemption never relayout the sharded pools.
+    shard_model: bool = False
+    mesh: Any = None                 # jax Mesh; None = serving_mesh()
 
 
 def make_decode_state(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
@@ -99,6 +138,19 @@ def make_decode_state(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
 
 
 class Engine:
+    """Batched speculative-decoding engine over ``batch`` request slots.
+
+    Args:
+      tcfg: target-model config (any family in the model zoo).
+      dcfg: drafter config, or None when ``ecfg.drafter_mode == "none"``.
+      tparams / dparams: target / drafter parameter pytrees. Under
+        ``ecfg.shard_model`` they are re-placed storage-sharded over the
+        serving mesh at construction.
+      ecfg: static engine configuration (see :class:`EngineConfig`).
+      batch: number of decode slots (the fixed batch dimension of the
+        decode state; the Scheduler admits requests into free slots).
+    """
+
     def __init__(self, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
                  tparams: dict, dparams: Optional[dict], ecfg: EngineConfig,
                  batch: int):
@@ -123,30 +175,107 @@ class Engine:
             self.pool_pages = ecfg.pool_pages or batch * self.pages_per_slot
             self.allocator = cache_ops.BlockAllocator(self.pool_pages)
             self._slot_pages: List[List[int]] = [[] for _ in range(batch)]
-        self._step = jax.jit(self._step_impl)
-        self._prefill = jax.jit(self._prefill_impl)
-        self._prefill_pad = jax.jit(self._prefill_pad_impl)
-        self._chunk = jax.jit(self._chunk_impl)
-        self._sched_step = jax.jit(self._sched_step_impl)
-        self._paged_step = jax.jit(self._paged_step_impl)
-        self._admit = jax.jit(self._admit_impl)
-        self._paged_admit = jax.jit(self._paged_admit_impl)
-        self._free = jax.jit(self._free_impl)
-        self._paged_free = jax.jit(self._paged_free_impl)
-        # one trace for every (slot, page-count) combination: slot and the
-        # full-width block-table row are both traced, so decode-time growth
-        # never recompiles (pinned by tests/test_cache_ops.py)
-        self._set_table_row = jax.jit(
-            lambda bt, slot, row: bt.at[slot].set(row))
         self._slot_axes = None
         self._paged_axes = None
         self._pspec = None
         self._pad_unsafe = None
+        self._contig_tpl = None
+        self._contig_sh = None
+        self._paged_sh = None
+        # --- model sharding (storage-sharded, replicated compute) ---------
+        self.mesh = None
+        if ecfg.shard_model:
+            self.mesh = ecfg.mesh if ecfg.mesh is not None else serving_mesh()
+            self._repl = NamedSharding(self.mesh, P())
+            self._tparam_sh = self._named(
+                shard_rules.serve_param_specs(tparams, self.mesh))
+            self.tparams = jax.device_put(tparams, self._tparam_sh)
+            self._dparam_sh = self._repl
+            if dparams is not None:
+                self._dparam_sh = self._named(
+                    shard_rules.serve_param_specs(dparams, self.mesh))
+                self.dparams = jax.device_put(dparams, self._dparam_sh)
+        self._build_jits()
+
+    # ------------------------------------------------------------------
+    # jit wiring (plain on one device; explicit NamedSharding in/out
+    # shardings under shard_model, so every entry point — steps, admission
+    # prefills, slot frees, block-table growth — keeps storage sharded at
+    # rest and never relies on sharding propagation across host calls)
+    # ------------------------------------------------------------------
+    def _named(self, specs):
+        """PartitionSpec pytree → NamedSharding pytree on the engine mesh."""
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs)
+
+    def _rep(self, tree):
+        """The exactness boundary: gather storage-sharded leaves so compute
+        downstream runs with single-device tensor shapes (bit-identical to
+        the unsharded engine). No-op without a mesh."""
+        return tree if self.mesh is None else replicate_tree(tree, self.mesh)
+
+    def _build_jits(self):
+        if self.mesh is None:
+            self._step = jax.jit(self._step_impl)
+            self._prefill = jax.jit(self._prefill_impl)
+            self._prefill_pad = jax.jit(self._prefill_pad_impl)
+            self._chunk = jax.jit(self._chunk_impl)
+            self._sched_step = jax.jit(self._sched_step_impl)
+            self._paged_step = jax.jit(self._paged_step_impl)
+            self._admit = jax.jit(self._admit_impl)
+            self._paged_admit = jax.jit(self._paged_admit_impl)
+            self._free = jax.jit(self._free_impl)
+            self._paged_free = jax.jit(self._paged_free_impl)
+            # one trace for every (slot, page-count) combination: slot and
+            # the full-width block-table row are both traced, so decode-time
+            # growth never recompiles (pinned by tests/test_cache_ops.py)
+            self._set_table_row = jax.jit(
+                lambda bt, slot, row: bt.at[slot].set(row))
+            return
+        rp, tp, dp = self._repl, self._tparam_sh, self._dparam_sh
+        # contiguous decode-state sharding: full-length k/v leaves sharded
+        # over the KV-head axis (head_dim fallback), the rest replicated —
+        # the same tree serves every batch size (specs touch trailing dims)
+        csh = self.state_shardings
+        jj = jax.jit
+        self._step = jj(self._step_impl, in_shardings=(tp, dp, csh),
+                        out_shardings=csh)
+        self._prefill = jj(self._prefill_impl,
+                           in_shardings=(tp, dp, rp, rp, rp),
+                           out_shardings=csh)
+        self._prefill_pad = jj(self._prefill_pad_impl,
+                               in_shardings=(tp, dp, rp, rp, rp, rp),
+                               out_shardings=csh)
+        self._chunk = jj(self._chunk_impl,
+                         in_shardings=(tp, dp, csh, rp, rp),
+                         out_shardings=csh)
+        self._sched_step = jj(self._sched_step_impl,
+                              in_shardings=(tp, dp, csh, rp, rp),
+                              out_shardings=csh)
+        self._admit = jj(self._admit_impl, in_shardings=(csh, csh, rp),
+                         out_shardings=csh)
+        self._free = jj(self._free_impl, in_shardings=(csh, rp),
+                        out_shardings=csh)
+        if self.paged:
+            # paged state: k/v *pools* shard on the same trailing axes;
+            # positions pools, block tables, per-slot rows replicate —
+            # admission/free/growth are then sharded-local data movement
+            psh = self.paged_state_shardings
+            self._paged_step = jj(self._paged_step_impl,
+                                  in_shardings=(tp, dp, psh, rp, rp),
+                                  out_shardings=psh)
+            self._paged_admit = jj(self._paged_admit_impl,
+                                   in_shardings=(psh, csh, rp, rp),
+                                   out_shardings=psh)
+            self._paged_free = jj(self._paged_free_impl,
+                                  in_shardings=(psh, rp), out_shardings=psh)
+        self._set_table_row = jj(lambda bt, slot, row: bt.at[slot].set(row),
+                                 in_shardings=(rp, rp, rp), out_shardings=rp)
 
     # ------------------------------------------------------------------
     # prefill
     # ------------------------------------------------------------------
     def _prefill_impl(self, tparams, dparams, prompts, extras, rng):
+        tparams, dparams = self._rep(tparams), self._rep(dparams)
         B, P = prompts.shape
         state = make_decode_state(self.model, self.tcfg, self.dcfg,
                                   self.ecfg, B, rng=rng)
@@ -176,10 +305,25 @@ class Engine:
                 dcache = D.extend(self.dcfg, self.tcfg, dparams, dcache,
                                   prompts[:, 1:], out.taps[:, -P:-1], pos)
             state["dcache"] = dcache
-        return state
+        # pin the result replicated: the out_shardings reshard is then pure
+        # data movement and can't propagate sharding back into the compute
+        return self._rep(state)
 
     def prefill(self, prompts: Array, extras: Optional[dict] = None,
                 rng: Optional[Array] = None):
+        """Whole-batch prefill: build a fresh decode state for ``prompts``
+        (B, P), committing one generated token per row.
+
+        Args:
+          prompts: (B, P) int32 token batch — equal lengths; per-request
+            admission with varied lengths goes through ``prefill_into_slot``.
+          extras: optional modality inputs (vision/encoder embeds, leading
+            batch axis B) forwarded to the target's prefill.
+          rng: PRNG key for sampled verification (default: PRNGKey(0)).
+
+        Returns:
+          A decode-state dict (see ``make_decode_state``) ready for
+          ``step``; under shard_model its KV leaves are placed sharded."""
         return self._prefill(self.tparams, self.dparams, prompts,
                              extras or {}, rng if rng is not None
                              else jax.random.PRNGKey(0))
@@ -195,6 +339,7 @@ class Engine:
         position; the pads' cache entries are invalidated afterwards (same
         position-based mechanism as speculative rollback), and logits/taps
         are gathered at the true last position instead of -1."""
+        tparams, dparams = self._rep(tparams), self._rep(dparams)
         B, Pb = prompts.shape
         state = make_decode_state(self.model, self.tcfg, self.dcfg,
                                   self.ecfg, B, rng=rng)
@@ -231,7 +376,7 @@ class Engine:
                 # pad pairs wrote drafter positions beyond the real prompt
                 dcache = cache_ops.commit(dcache, None, cp - 1, zero)
             state["dcache"] = dcache
-        return state
+        return self._rep(state)
 
     def _chunk_impl(self, tparams, dparams, state, chunk, start):
         """Recurrent-family bucketed prefill step: feed ``chunk`` (B, c) of
@@ -239,6 +384,8 @@ class Engine:
         Exact for SSM/RG-LRU state (pads would corrupt the recurrence, so
         chunking replaces padding); each chunk size is a power of two, so a
         length-P prompt costs popcount(P) cached traces."""
+        tparams, dparams = self._rep(tparams), self._rep(dparams)
+        state = self._rep(state)
         B, c = chunk.shape
         off = self.pos_offset
         positions = jnp.broadcast_to(
@@ -269,7 +416,7 @@ class Engine:
                 (B, c))
             new["dcache"] = D.extend(self.dcfg, self.tcfg, dparams,
                                      state["dcache"], chunk, taps, dpos)
-        return new
+        return self._rep(new)
 
     @staticmethod
     def prefill_buckets(length: int) -> List[int]:
@@ -326,8 +473,10 @@ class Engine:
     # one speculative iteration
     # ------------------------------------------------------------------
     def _step_impl(self, tparams, dparams, state):
-        return speculative_step(self.model, self.tcfg, self.dcfg, self.ecfg,
-                                tparams, dparams, state)
+        tparams, dparams = self._rep(tparams), self._rep(dparams)
+        out = speculative_step(self.model, self.tcfg, self.dcfg, self.ecfg,
+                               tparams, dparams, self._rep(state))
+        return self._rep(out)
 
     # ------------------------------------------------------------------
     # per-slot lifecycle (continuous batching; serving/scheduler.py)
@@ -346,16 +495,25 @@ class Engine:
             self._slot_axes = cache_ops.batch_axes(pf(1), pf(2))
         return self._slot_axes
 
+    def _abstract_state(self):
+        """Cached abstract (jax.eval_shape) contiguous decode state at the
+        engine batch — the ONE template pspec / state_shardings /
+        blank_state all derive from, so the full prefill is abstract-traced
+        once per Engine, not once per consumer."""
+        if self._contig_tpl is None:
+            self._contig_tpl = jax.eval_shape(
+                self._prefill_impl, self.tparams, self.dparams,
+                jax.ShapeDtypeStruct((self.batch, 4), jnp.int32), {},
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return self._contig_tpl
+
     @property
     def pspec(self):
         """Paged-layout leaf tags (cache_ops.paged_spec) over the decode
         state: which leaves live in the page pool vs per-slot rows."""
         if self._pspec is None:
-            tpl = jax.eval_shape(
-                self._prefill_impl, self.tparams, self.dparams,
-                jax.ShapeDtypeStruct((self.batch, 4), jnp.int32), {},
-                jax.ShapeDtypeStruct((2,), jnp.uint32))
-            self._pspec = cache_ops.paged_spec(tpl, self.ecfg.max_len)
+            self._pspec = cache_ops.paged_spec(self._abstract_state(),
+                                               self.ecfg.max_len)
         return self._pspec
 
     @property
@@ -372,16 +530,44 @@ class Engine:
             self._paged_axes = cache_ops.batch_axes(blank(1), blank(2))
         return self._paged_axes
 
+    @property
+    def state_shardings(self):
+        """NamedSharding pytree of the contiguous decode state (shard_model
+        only): attention k/v leaves (full-length rows and ring windows)
+        storage-shard over the KV-head axis ("model"), everything else
+        replicates (sharding/rules.serve_state_specs). One tree serves
+        every batch size — the sharded axes are trailing (KV, hd) dims
+        that batch doesn't touch."""
+        if self._contig_sh is None:
+            self._contig_sh = self._named(shard_rules.serve_state_specs(
+                self._abstract_state(), self.mesh))
+        return self._contig_sh
+
+    @property
+    def paged_state_shardings(self):
+        """NamedSharding pytree of the paged decode state (shard_model
+        only): k/v page *pools* shard over the same trailing (KV, hd) axes,
+        position pools / block tables / per-slot rows replicate — so page
+        growth, admission scatters, and preemption frees are sharded-local
+        data movement, never a pool relayout."""
+        if self._paged_sh is None:
+            tpl = jax.eval_shape(lambda: cache_ops.paged_state(
+                make_decode_state(self.model, self.tcfg, self.dcfg,
+                                  self.ecfg, self.batch),
+                self.pspec, self.ecfg.page_size, self.pool_pages))
+            tpl["block_table"] = jax.ShapeDtypeStruct(
+                (self.batch, self.pages_per_slot), jnp.int32)
+            self._paged_sh = self._named(
+                shard_rules.serve_state_specs(tpl, self.mesh))
+        return self._paged_sh
+
     def blank_state(self, rng: Optional[Array] = None) -> dict:
         """An all-idle batch state: empty caches (positions -1), zero tokens,
         every slot frozen (new_count == max_new_tokens so the budget check
         keeps it inert). Slots come alive via ``prefill_into_slot``. In the
         paged layout, full-length KV leaves are page pools and the state
         carries a per-slot ``block_table`` (B, max_len/page_size), all -1."""
-        sds = jax.eval_shape(
-            self._prefill_impl, self.tparams, self.dparams,
-            jax.ShapeDtypeStruct((self.batch, 4), jnp.int32), {},
-            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        sds = self._abstract_state()
         state = make_decode_state(
             self.model, self.tcfg, self.dcfg, self.ecfg, self.batch,
             taps_dtype=sds["taps_last"].dtype,
@@ -392,6 +578,9 @@ class Engine:
                                           self.pool_pages)
             state["block_table"] = jnp.full(
                 (self.batch, self.pages_per_slot), -1, jnp.int32)
+        if self.mesh is not None:
+            state = jax.device_put(state, self.paged_state_shardings
+                                   if self.paged else self.state_shardings)
         return state
 
     @property
@@ -600,9 +789,11 @@ class Engine:
                                 jnp.asarray(max_new, jnp.int32))
 
     def _sched_step_impl(self, tparams, dparams, state, active, max_new):
-        return speculative_step(self.model, self.tcfg, self.dcfg, self.ecfg,
-                                tparams, dparams, state,
-                                active_mask=active, max_new=max_new)
+        tparams, dparams = self._rep(tparams), self._rep(dparams)
+        out = speculative_step(self.model, self.tcfg, self.dcfg, self.ecfg,
+                               tparams, dparams, self._rep(state),
+                               active_mask=active, max_new=max_new)
+        return self._rep(out)
 
     def _paged_step_impl(self, tparams, dparams, state, active, max_new):
         """Paged twin of _sched_step_impl: reassemble each slot's pages into
@@ -610,13 +801,23 @@ class Engine:
         run the identical speculative iteration, scatter the updated view
         back through the block table. All inside one jit, so rollback
         invalidation and snapshot commit are bit-identical across layouts —
-        the cross-layout equivalence tests pin this."""
+        the cross-layout equivalence tests pin this.
+
+        Under shard_model the gathered view (and the weights) cross the
+        replication boundary before the step — the all-gather of each
+        slot's pages — and the stepped view is pinned replicated again
+        before ``scatter_state`` writes it back into the sharded pools, so
+        the speculative iteration itself computes with single-device
+        shapes (the losslessness invariant) while pools stay sharded at
+        rest across the host round-trip."""
+        tparams, dparams = self._rep(tparams), self._rep(dparams)
         table = state["block_table"]
         core = {k: v for k, v in state.items() if k != "block_table"}
-        view = cache_ops.gather_state(core, table, self.pspec)
+        view = self._rep(cache_ops.gather_state(core, table, self.pspec))
         view = speculative_step(self.model, self.tcfg, self.dcfg, self.ecfg,
                                 tparams, dparams, view,
                                 active_mask=active, max_new=max_new)
+        view = self._rep(view)
         core = cache_ops.scatter_state(core, view, table, self.pspec)
         core["block_table"] = table
         return core

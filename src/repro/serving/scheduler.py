@@ -59,6 +59,13 @@ EOS (output trimmed at the first EOS, vLLM semantics) and budget exhaustion,
 and retires slots. Speculative commits can overshoot a budget by up to K;
 overshoot tokens are trimmed from the emitted output.
 
+The scheduler is device-layout agnostic: it only ever calls the Engine's
+jitted entry points and reads back small replicated counters, so a
+model-sharded engine (``EngineConfig(shard_model=True)`` — weights and KV
+page pools storage-sharded over a device mesh, docs/sharding.md) slots in
+with zero changes here and identical token streams (pinned by the sharded
+cases in tests/test_serving.py and tests/test_async_serving.py).
+
 Quickstart::
 
     eng = Engine(tcfg, dcfg, tparams, dparams, EngineConfig(...), batch=4)

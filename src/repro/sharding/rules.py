@@ -14,7 +14,7 @@ from typing import Optional
 import jax
 from jax.sharding import PartitionSpec as P
 
-from repro.sharding.utils import _current_mesh, _filter_spec
+from repro.sharding.utils import _current_mesh, _filter_spec, mesh_scope
 
 # (regex over path, spec entries applied to the *trailing* dims).
 # Stacked-layer leading dims (scan) are padded with None automatically.
@@ -166,3 +166,78 @@ def _cache_leaf_spec(path_s: str, leaf) -> P:
 def cache_specs(cache):
     return jax.tree_util.tree_map_with_path(
         lambda p, l: _cache_leaf_spec(_path_str(p), l), cache)
+
+
+# ---------------------------------------------------------------------------
+# Serving (lossless) profile — storage sharding for the model-sharded engine
+# ---------------------------------------------------------------------------
+#
+# The serving engine (serving/engine.py, EngineConfig(shard_model=True))
+# shards *storage*, not compute: weights and full-length KV — contiguous
+# per-slot rows and the paged page pools alike — live sharded over the 1-D
+# ("model",) serving mesh and are gathered at an explicit replication
+# boundary inside each jitted step (sharding/utils.replicate_tree). Compute
+# then runs with single-device tensor shapes, which is what makes the
+# sharded engine token-for-token (bitwise) lossless: reduction order and
+# backend matmul tiling are shape-dependent, so any scheme that *computes*
+# on sharded operands (Megatron-style row-parallel matmuls, per-head
+# attention on a KV shard) drifts by ulps and eventually flips a greedy
+# argmax. See docs/sharding.md for the measured evidence and the layout
+# table.
+#
+# What shards at rest, and on which axis:
+#   k/v leaves (rank >= 4)   — the KV-head axis (dim -2) over "model";
+#       narrow-GQA shapes that don't divide fall back to head_dim (dim -1).
+#       One rule covers every K/V shape because all of them keep the
+#       trailing (KV, hd) dims: contiguous full-length (..., B, S, KV, hd),
+#       page pools (..., NP, page, KV, hd), and per-slot ring
+#       (sliding-window) windows (..., B, W, KV, hd).
+#   everything else          — replicated. positions/block tables are tiny
+#       and index math; recurrent state (SSM "state", conv windows, RG-LRU
+#       "h") is O(B·d) bounded per slot and not worth a gather boundary;
+#       host bookkeeping (tokens, counters, rng) must stay cheap to read
+#       back every scheduler sync.
+#   BlockAllocator free lists — host-side Python, never on device at all.
+
+def serve_param_specs(params, mesh, rules=PARAM_RULES):
+    """Storage-sharding PartitionSpecs for serving weights under ``mesh``.
+
+    Reuses the training PARAM_RULES: under the 1-D ``("model",)`` serving
+    mesh the "data" entries drop out automatically (utils._filter_spec), so
+    each weight keeps roughly a 1/n_model resident footprint and is
+    all-gathered on use — FSDP/ZeRO-3-style inference dataflow, which keeps
+    the matmuls full-shape (the losslessness requirement above)."""
+    with mesh_scope(mesh):
+        return param_specs(params, rules)
+
+
+def _serve_state_leaf(path_s: str, leaf, mesh) -> P:
+    name = path_s.rsplit("/", 1)[-1]
+    if name in ("k", "v") and leaf.ndim >= 4:
+        nd = leaf.ndim
+        ent = [None] * nd
+        ent[nd - 2] = "model"                    # KV-head axis
+        spec = _filter_spec(leaf.shape, ent, mesh)
+        if spec[nd - 2] is None:                 # narrow GQA → shard head_dim
+            ent[nd - 2], ent[nd - 1] = None, "model"
+            spec = _filter_spec(leaf.shape, ent, mesh)
+        return spec
+    return P()
+
+
+def serve_state_specs(state, mesh):
+    """Storage-sharding PartitionSpecs for a serving decode state (either
+    layout: contiguous per-slot caches or the paged state whose full-length
+    KV leaves are page pools + a ``block_table``).
+
+    Attention K/V — the k/v leaves of target, drafter, and encdec cross
+    caches, whether contiguous full-length rows, page pools, or per-slot
+    ring windows — shards (KV-head axis, head_dim fallback); every other
+    leaf replicates. Leaves are matched by name and rank, so the one rule
+    covers the (..., B, max_len, KV, hd), (..., NP, page, KV, hd), and
+    (..., B, W, KV, hd) shapes alike; block tables and position pools stay
+    replicated so page growth and preemption (``Engine.ensure_capacity`` /
+    ``cache_ops.blank_pages``) are pure host-or-replicated updates that
+    never relayout the sharded pools."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _serve_state_leaf(_path_str(p), l, mesh), state)

@@ -2,26 +2,84 @@
 
 Models sprinkle ``shard_hint(x, "data", None, "model")`` constraints; on a
 single-device CPU run (tests, benchmarks) there is no mesh and the hint is a
-no-op, while under ``jax.set_mesh``/``with mesh`` in the dry-run and launchers
-it becomes ``with_sharding_constraint``. Axes that do not exist in the mesh or
-do not divide the corresponding dimension are dropped from the spec rather
-than erroring, which lets one model definition serve every (arch × mesh).
+no-op, while under ``mesh_scope`` (``jax.set_mesh``/``with mesh``) in the
+dry-run, launchers, and the model-sharded serving engine it becomes
+``with_sharding_constraint``. Axes that do not exist in the mesh or do not
+divide the corresponding dimension are dropped from the spec rather than
+erroring, which lets one model definition serve every (arch × mesh).
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 AxisEntry = Union[None, str, Sequence[str]]
 
 
 # Legacy-jax fallback (no set_mesh/use_mesh/get_abstract_mesh, e.g. 0.4.x):
-# launch.steps.mesh_context pushes the concrete Mesh here; a concrete Mesh
-# exposes the same .empty/.axis_names/.shape surface the abstract mesh does.
+# mesh_scope pushes the concrete Mesh here; a concrete Mesh exposes the same
+# .empty/.axis_names/.shape surface the abstract mesh does.
 _FALLBACK_MESH: list = []
+
+
+def mesh_scope(mesh):
+    """Enter ``mesh`` so ``shard_hint`` / ``spec_for`` / the rules in
+    sharding/rules.py see it during tracing or eager spec resolution.
+
+    Uses ``jax.set_mesh`` / ``jax.sharding.use_mesh`` when the installed jax
+    has them; on legacy jax (0.4.x) falls back to pushing the concrete Mesh
+    onto ``_FALLBACK_MESH`` and entering ``with mesh:`` (the physical
+    resource env bare-``PartitionSpec`` constraints need there)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)       # context manager in jax >= 0.7
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return _legacy_mesh_scope(mesh)
+
+
+@contextlib.contextmanager
+def _legacy_mesh_scope(mesh):
+    _FALLBACK_MESH.append(mesh)
+    try:
+        with mesh:                      # resource env for bare-P constraints
+            yield mesh
+    finally:
+        _FALLBACK_MESH.pop()
+
+
+def serving_mesh(n_devices: Optional[int] = None):
+    """1-D ``("model",)`` mesh over the first ``n_devices`` local devices
+    (all of them when None) — the serving engine's tensor-sharding mesh.
+
+    Serving shards *storage* over a single model axis (weights and KV page
+    pools; see docs/sharding.md): there is no data axis because the
+    scheduler's continuous batch is one replica — request rows are slots of
+    one decode state, not a data-parallel shard."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    if n > len(devs):
+        raise ValueError(f"serving_mesh({n}): only {len(devs)} devices")
+    return jax.sharding.Mesh(np.asarray(devs[:n]), ("model",))
+
+
+def replicate_tree(tree, mesh):
+    """Constrain every leaf of ``tree`` to be fully replicated over ``mesh``
+    (inside jit: an all-gather at this point for sharded-at-rest leaves).
+
+    This is the serving engine's exactness boundary: storage-sharded
+    weights/pools are gathered here and every op downstream computes with
+    the exact tensor shapes of a single-device run, so results are
+    bit-identical to the unsharded engine (reduction order and backend
+    matmul tiling are shape-dependent — sharded *compute* is not lossless;
+    sharded *storage* with gather-on-use is)."""
+    repl = NamedSharding(mesh, P())
+    return jax.tree.map(
+        lambda x: jax.lax.with_sharding_constraint(x, repl), tree)
 
 
 def _current_mesh():

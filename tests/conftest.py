@@ -20,3 +20,13 @@ except ImportError:
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+def require_devices(n: int):
+    """Skip unless jax sees >= n devices — shared by the model-sharded
+    serving tests, which run for real in CI's tier1-multidevice lane."""
+    import pytest
+    if jax.device_count() < n:
+        pytest.skip(
+            f"needs {n} devices, jax sees {jax.device_count()} (run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n})")

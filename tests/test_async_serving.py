@@ -35,6 +35,7 @@ from repro.configs import DrafterConfig, get_config
 from repro.core import drafter as D
 from repro.models import get_model
 from repro.serving import Engine, EngineConfig, Request, Scheduler
+from repro.sharding.utils import serving_mesh
 
 KEY = jax.random.PRNGKey(17)
 
@@ -57,14 +58,22 @@ def _setup(family):
 
 @lru_cache(maxsize=None)
 def get_engine(family="dense", pool_pages=0, kv_growth="incremental",
-               batch=2):
+               batch=2, shard=0):
+    """``shard`` > 0 builds the engine model-sharded over that many devices
+    (weights + KV page pools storage-sharded; lossless by construction —
+    the sharded tests below pin it against single-device references)."""
     tcfg, dcfg, tparams, dparams = _setup(family)
     return Engine(tcfg, dcfg, tparams, dparams,
                   EngineConfig(K=2, max_new_tokens=16,
                                drafter_mode="parallel", max_len=64,
                                kv_layout="paged", page_size=8,
-                               pool_pages=pool_pages, kv_growth=kv_growth),
+                               pool_pages=pool_pages, kv_growth=kv_growth,
+                               shard_model=shard > 0,
+                               mesh=serving_mesh(shard) if shard else None),
                   batch)
+
+
+from conftest import require_devices  # noqa: E402  (tests dir on sys.path)
 
 
 def assert_pool_drained(eng):
@@ -113,6 +122,34 @@ def test_preempted_stream_equals_uninterrupted(family):
         np.testing.assert_array_equal(
             res["tokens"], solo_tokens(eng, p, b),
             err_msg=f"{family}: rid {res['rid']} diverged after preemption")
+    assert_pool_drained(eng)
+
+
+@pytest.mark.parametrize("family,shard", [("dense", 4), ("ssm", 4),
+                                          ("hybrid", 4), ("dense", 8)])
+def test_sharded_preempt_resume_matches_single_device(family, shard):
+    """The acceptance pin for model-sharded serving: on a mesh of forced
+    host devices, the full churn cycle — tight pool, decode-time growth
+    failure, eviction, recompute-prefill resume — emits token-for-token
+    what the *single-device* engine emits for every request. Preemption and
+    growth are exactly where a resharding bug would hide (pages freed and
+    recycled between slots cross the sharded pools), so the workload is
+    forced to preempt at least once."""
+    require_devices(shard)
+    eng = get_engine(family, pool_pages=5, shard=shard)
+    ref = get_engine(family, pool_pages=5)          # single-device twin
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, 200, size=6).astype(np.int32)
+               for _ in range(3)]
+    budgets = [14, 14, 8]
+    rep = Scheduler(eng).serve([Request(p, max_new_tokens=b)
+                                for p, b in zip(prompts, budgets)])
+    assert rep["preemptions"] >= 1, "workload was meant to force eviction"
+    for res, p, b in zip(rep["results"], prompts, budgets):
+        np.testing.assert_array_equal(
+            res["tokens"], solo_tokens(ref, p, b),
+            err_msg=f"{family}@mesh{shard}: rid {res['rid']} diverged from "
+                    "the single-device stream")
     assert_pool_drained(eng)
 
 

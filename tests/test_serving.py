@@ -2,7 +2,15 @@
 invalidation + recurrent snapshot selection), max_new_tokens freezing, and
 cross-layout losslessness — the paged (block-table) engine with bucketed
 admission must emit token-for-token what the contiguous engine with
-exact-length prefills emits, for dense, SSM, and hybrid targets."""
+exact-length prefills emits, for dense, SSM, and hybrid targets.
+
+The cross-layout suite is additionally parametrized over ``shard_model``
+mesh sizes (0 = single device, 4, 8): a model-sharded engine (storage-
+sharded weights + KV pools, sharding/rules.serve_state_specs) must emit the
+exact same tokens as the single-device reference, including through
+incremental page growth. Sharded cases run in CI's tier1-multidevice lane
+(XLA_FLAGS=--xla_force_host_platform_device_count=8) and skip on a real
+single-device run."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,8 +20,21 @@ from repro.configs import DrafterConfig, get_config
 from repro.core import drafter as D
 from repro.models import get_model
 from repro.serving import Engine, EngineConfig, Request, Scheduler, cache_ops
+from repro.sharding.utils import serving_mesh
 
 KEY = jax.random.PRNGKey(7)
+
+
+from conftest import require_devices  # noqa: E402  (tests dir on sys.path)
+
+
+def mesh_or_skip(n_devices: int):
+    """Serving mesh over ``n_devices``, or None for 0; skips when jax does
+    not see enough devices (the tier1-multidevice CI lane forces 8)."""
+    if not n_devices:
+        return None
+    require_devices(n_devices)
+    return serving_mesh(n_devices)
 
 
 def test_commit_invalidates_stale_positions():
@@ -81,26 +102,35 @@ def test_engine_losslessness_greedy(mode):
     assert (np.asarray(spec["state"]["new_count"]) >= max_new).all()
 
 
+@pytest.mark.parametrize("shard", [0, 4, 8])
 @pytest.mark.parametrize("arch", ["qwen2-1.5b", "mamba2-780m",
                                   "recurrentgemma-2b"])
-def test_cross_layout_losslessness(arch):
+def test_cross_layout_losslessness(arch, shard):
     """Greedy decode through the paged engine (page-pool KV, block tables,
     power-of-two-bucketed admission prefills) equals the contiguous engine
     with exact-length prefills token-for-token, across prompt lengths that
     hit the pad path, the chunk path, and partial pages — for a dense, an
-    SSM, and a hybrid (RG-LRU + local attention) target."""
+    SSM, and a hybrid (RG-LRU + local attention) target.
+
+    ``shard`` > 0 runs the engine under test model-sharded over that many
+    forced host devices (weights + KV pools storage-sharded, both layouts)
+    while the reference stays single-device-layout: the sharded engine must
+    reproduce it exactly, incremental page growth included."""
+    mesh = mesh_or_skip(shard)
     tcfg = get_config(arch).reduced()
     m = get_model(tcfg)
     tparams = m.init(KEY)
     dcfg = DrafterConfig(n_layers=1, k_infer=2).resolve(tcfg)
     dparams = D.init_params(dcfg, tcfg, jax.random.fold_in(KEY, 3))
 
-    def make(layout, bucket):
+    def make(layout, bucket, sharded=False):
         return Engine(tcfg, dcfg, tparams, dparams,
                       EngineConfig(K=2, max_new_tokens=6,
                                    drafter_mode="parallel", max_len=64,
                                    kv_layout=layout, page_size=8,
-                                   bucket_prefill=bucket), 2)
+                                   bucket_prefill=bucket,
+                                   shard_model=sharded and mesh is not None,
+                                   mesh=mesh if sharded else None), 2)
 
     rng = np.random.default_rng(23)
     lengths = [4, 5, 7, 3, 9]            # pow2, pow2±1, multi-chunk
@@ -110,14 +140,26 @@ def test_cross_layout_losslessness(arch):
     reqs = lambda: [Request(p, max_new_tokens=b)          # noqa: E731
                     for p, b in zip(prompts, budgets)]
     ref = Scheduler(make("contiguous", False)).serve(reqs())
-    paged_eng = make("paged", True)
+    paged_eng = make("paged", True, sharded=True)
     got = Scheduler(paged_eng).serve(reqs())
     for r, g in zip(ref["results"], got["results"]):
         np.testing.assert_array_equal(
             r["tokens"], g["tokens"],
-            err_msg=f"{arch}: request {r['rid']} diverged across layouts")
+            err_msg=f"{arch}: request {r['rid']} diverged across layouts"
+                    f" (shard={shard})")
     # paged bookkeeping drained cleanly
     assert paged_eng.allocator.n_free == paged_eng.pool_pages
+    if shard:
+        # not vacuous: at least the drafter KV pools genuinely sharded
+        assert any(not s.is_fully_replicated
+                   for s in jax.tree.leaves(paged_eng.paged_state_shardings))
+        # the sharded *contiguous* engine must match the reference too
+        got_c = Scheduler(make("contiguous", False, sharded=True)).serve(
+            reqs())
+        for r, g in zip(ref["results"], got_c["results"]):
+            np.testing.assert_array_equal(
+                r["tokens"], g["tokens"],
+                err_msg=f"{arch}: contiguous sharded diverged (shard={shard})")
 
 
 def test_bucketed_prefill_ring_window_safe():
@@ -147,6 +189,41 @@ def test_bucketed_prefill_ring_window_safe():
                                 for p in prompts])
     for r, g in zip(ref["results"], got["results"]):
         np.testing.assert_array_equal(r["tokens"], g["tokens"])
+
+
+def test_paged_decode_kernel_sharded_pool_pin():
+    """kernels/ops.paged_decode_attention(mesh=...) — the TPU-path twin of
+    the engine's gather boundary: a storage-sharded K/V pool passed to the
+    SPMD-opaque pallas call must be gathered *at the pin*, and the result
+    must be bitwise what the replicated call computes."""
+    require_devices(4)
+    from repro.kernels import ops
+    from repro.sharding.rules import serve_state_specs
+    from jax.sharding import NamedSharding
+
+    mesh = serving_mesh(4)
+    B, T, H, KV, hd, NP, page, nb = 2, 3, 4, 2, 64, 8, 4, 3
+    k = jax.random.PRNGKey(11)
+    q = jax.random.normal(k, (B, T, H, hd), jnp.float32)
+    kp = jax.random.normal(jax.random.fold_in(k, 1), (NP, page, KV, hd))
+    vp = jax.random.normal(jax.random.fold_in(k, 2), (NP, page, KV, hd))
+    table = jnp.asarray([[0, 2, -1], [5, -1, -1]], jnp.int32)
+    pos_pool = jnp.full((NP, page), -1, jnp.int32)
+    pos_pool = pos_pool.at[0].set(jnp.arange(page))
+    pos_pool = pos_pool.at[2, :2].set(page + jnp.arange(2))
+    pos_pool = pos_pool.at[5, :3].set(jnp.arange(3))
+    qpos = jnp.asarray([[5, 6, 7], [2, 3, 4]], jnp.int32)
+
+    ref = ops.paged_decode_attention(q, kp, vp, pos_pool, table, qpos,
+                                     scale=hd ** -0.5)
+    # shard the pools at rest exactly as the serving profile would
+    specs = serve_state_specs({"k": kp, "v": vp}, mesh)
+    assert not NamedSharding(mesh, specs["k"]).is_fully_replicated
+    kp_s = jax.device_put(kp, NamedSharding(mesh, specs["k"]))
+    vp_s = jax.device_put(vp, NamedSharding(mesh, specs["v"]))
+    got = ops.paged_decode_attention(q, kp_s, vp_s, pos_pool, table, qpos,
+                                     scale=hd ** -0.5, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
 
 
 def test_acceptance_length_accounting():

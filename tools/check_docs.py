@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Docs health check, run by CI's docs job (and usable locally):
+
+  1. every *relative* markdown link in README.md and docs/*.md resolves to
+     an existing file (anchors are stripped; http(s)/mailto links skipped);
+  2. every fenced ``>>>`` doctest example in docs/*.md passes under
+     ``python -m doctest`` semantics.
+
+Usage:  PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import doctest
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+# [text](target) — markdown inline links; images share the syntax
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def doc_files() -> list:
+    return [os.path.join(ROOT, "README.md")] + sorted(
+        glob.glob(os.path.join(ROOT, "docs", "*.md")))
+
+
+def check_links(path: str) -> list:
+    errors = []
+    text = open(path).read()
+    # fenced code blocks can contain sample output that looks like links
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(
+            os.path.join(os.path.dirname(path), rel))
+        if not os.path.exists(resolved):
+            errors.append(f"{os.path.relpath(path, ROOT)}: broken link "
+                          f"-> {target}")
+    return errors
+
+
+def check_doctests(path: str) -> list:
+    fails, _ = doctest.testfile(path, module_relative=False, verbose=False)
+    return ([f"{os.path.relpath(path, ROOT)}: {fails} doctest failure(s)"]
+            if fails else [])
+
+
+def main() -> int:
+    errors = []
+    n_examples = 0
+    for path in doc_files():
+        errors += check_links(path)
+        if os.sep + "docs" + os.sep in path:
+            n_examples += len(
+                doctest.DocTestParser().get_examples(open(path).read()))
+            errors += check_doctests(path)
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    if not errors:
+        print(f"docs OK: {len(doc_files())} files, "
+              f"{n_examples} doctest examples")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
