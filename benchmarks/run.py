@@ -24,7 +24,7 @@ def main() -> None:
                             table5_embedding, table6_depth, table7_epochs,
                             table8_seqlen, table9_acceptance, table10_otps,
                             table11_continuous, table12_paged, table13_async,
-                            table14_sharded, roofline)
+                            table14_sharded, table15_sampling, roofline)
 
     epochs = 12 if args.quick else 22
     jobs = {
@@ -42,6 +42,7 @@ def main() -> None:
         "12": lambda: table12_paged.run(epochs=epochs),
         "13": lambda: table13_async.run(epochs=epochs),
         "14": lambda: table14_sharded.run(epochs=epochs),
+        "15": lambda: table15_sampling.run(epochs=epochs),
         "roofline": lambda: roofline.run(),
     }
     wanted = list(jobs) if args.tables == "all" else [

@@ -10,10 +10,12 @@ depths, each under BOTH batching disciplines:
                   finished slot is reused immediately
 
 Requests get heterogeneous max_new_tokens budgets, so continuous batching's
-straggler win is visible in the OTPS column. Two extra rows serve the same
-mix through the paged-KV engine (incremental page growth) and under Poisson
-arrival times on the scheduler's virtual clock (queue-wait / latency
-percentiles, lossless preemption when the pool runs dry).
+straggler win is visible in the OTPS column. Three extra rows serve the
+same mix through the paged-KV engine (incremental page growth), under
+Poisson arrival times on the scheduler's virtual clock (queue-wait /
+latency percentiles, lossless preemption when the pool runs dry), and as a
+mixed-policy batch (half greedy, half seeded nucleus sampling via
+per-request SamplingParams — one jitted step serves both).
 
     PYTHONPATH=src python examples/serve_batched.py [--requests 12]
 """
@@ -30,8 +32,8 @@ from benchmarks.common import longtail_budgets
 from repro.configs import DrafterConfig, get_config
 from repro.data import MTPPipeline, self_generated_corpus
 from repro.models import get_model
-from repro.serving import (Engine, EngineConfig, Request, Scheduler,
-                           serve_round_based)
+from repro.serving import (Engine, EngineConfig, Request, SamplingParams,
+                           Scheduler, serve_round_based)
 from repro.training import Trainer, TrainConfig
 
 
@@ -143,6 +145,25 @@ def main():
           f"{asy['p50_latency_vt']:.0f}/{asy['p99_latency_vt']:.0f} vt, "
           f"wait p99 {asy['p99_wait_vt']:.0f} vt, "
           f"{asy['preemptions']} preemptions)")
+
+    # mixed-policy batch: per-request SamplingParams — even requests greedy
+    # (exact argmax rows), odd requests seeded nucleus sampling — through
+    # ONE engine and one compiled step; sampled rows are bitwise
+    # reproducible (deterministic fold_in(seed, position) streams,
+    # benchmarks/table15_sampling.py sweeps AL vs temperature)
+    eng_m = make("parallel", dcfg_p, tr_p.dparams, 5)
+    sps = [SamplingParams.greedy(seed=i) if i % 2 == 0 else
+           SamplingParams(temperature=0.8, top_p=0.95, seed=i)
+           for i in range(args.requests)]
+    mx = None
+    for _ in range(2):
+        mx = Scheduler(eng_m, sync_every=args.sync_every).serve(
+            [Request(p, max_new_tokens=b, sampling=sp)
+             for p, b, sp in zip(prompts, budgets, sps)])
+    print(f"{'P-EAGLE mixed':16s} {'—':>11s} {mx['otps']:11.1f} "
+          f"{'—':>10s} {mx['mean_acceptance_length']:5.2f}   "
+          f"(half greedy / half T=0.8 top-p 0.95, per-request seeds, "
+          "one jitted step)")
 
 
 if __name__ == "__main__":

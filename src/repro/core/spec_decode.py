@@ -1,6 +1,13 @@
-"""Speculative-decoding verification: greedy prefix matching and lossless
-rejection sampling (Leviathan et al. 2023 / Chen et al. 2023), plus the
+"""Speculative-decoding verification: greedy prefix matching, lossless
+rejection sampling (Leviathan et al. 2023 / Chen et al. 2023) with
+per-request deterministic key streams, logit warping (temperature / top-k /
+top-p applied identically to drafter and target rows), and the
 acceptance-length bookkeeping the paper reports.
+
+Verification policy is per ROW, not per engine: :func:`mixed_verify` runs
+the argmax prefix-match path for ``temperature == 0`` rows and seeded
+rejection sampling against the warped distributions for the rest, inside
+one jitted step — a batch may freely mix greedy and sampled requests.
 
 All shapes static, all rows independent — jit/pjit friendly.
 """
@@ -31,55 +38,181 @@ def greedy_verify(draft_tokens: Array,
     return accept_len, t_star
 
 
-def rejection_verify(key: Array, draft_tokens: Array, draft_probs: Array,
-                     target_probs: Array) -> Tuple[Array, Array]:
-    """Lossless stochastic verification.
+# ---------------------------------------------------------------------------
+# logit warping (per-row temperature / top-k / top-p)
+# ---------------------------------------------------------------------------
 
-    draft_probs (B, K, V) — drafter distributions the drafts were sampled
-    from; target_probs (B, K+1, V). Token i accepted w.p.
-    min(1, p_i(d_i)/q_i(d_i)); on first rejection the replacement is sampled
-    from norm(max(p - q, 0)); if all accepted, bonus ~ p_{K}.
+def warp_probs(logits: Array, temperature: Array, top_k: Array,
+               top_p: Array) -> Array:
+    """Per-row warped target/drafter distributions.
+
+    Args:
+      logits: (B, T, V) raw logits.
+      temperature: (B,) — rows with ``temperature <= 0`` are warped at 1.0
+        (their output is never consumed: greedy rows take the argmax path).
+      top_k: (B,) — keep the k highest logits per position (0 disables).
+        Ties at the k-th value are all kept, so the warp is deterministic.
+      top_p: (B,) — nucleus filter: keep the smallest probability-sorted
+        prefix with mass >= top_p (>= 1 disables; the top-1 token is always
+        kept, so degenerate values from blank slots cannot produce an empty
+        support).
+
+    Returns:
+      (B, T, V) probabilities, renormalized over the kept support. The same
+      warp is applied to drafter and target rows, which is what makes the
+      rejection verification lossless w.r.t. each request's *warped* target
+      distribution.
+    """
+    B, T, V = logits.shape
+    t = jnp.where(temperature > 0, temperature, 1.0)[:, None, None]
+    z = logits / t
+    # top-k: mask everything strictly below the k-th highest logit
+    k = jnp.where(top_k > 0, jnp.minimum(top_k, V), V)
+    z_sorted = jnp.sort(z, axis=-1)[..., ::-1]                    # descending
+    kth = jnp.take_along_axis(
+        z_sorted, jnp.broadcast_to((k - 1)[:, None, None], (B, T, 1)),
+        axis=-1)
+    z = jnp.where(z >= kth, z, -jnp.inf)
+    p = jax.nn.softmax(z, axis=-1)
+    # top-p: keep the minimal descending-sorted prefix reaching the mass;
+    # implemented via the smallest kept probability so ties are all kept
+    p_sorted = jnp.sort(p, axis=-1)[..., ::-1]
+    csum = jnp.cumsum(p_sorted, axis=-1)
+    keep_sorted = (csum - p_sorted) < top_p[:, None, None]
+    keep_sorted = keep_sorted.at[..., 0].set(True)                # never empty
+    p_min = jnp.min(jnp.where(keep_sorted, p_sorted, jnp.inf), axis=-1,
+                    keepdims=True)
+    p = jnp.where(p >= p_min, p, 0.0)
+    return p / p.sum(-1, keepdims=True)
+
+
+def sample_token(keys: Array, logits: Array, temperature: Array,
+                 top_k: Array, top_p: Array) -> Array:
+    """Mixed-policy single-token selection from (B, V) logits: argmax for
+    ``temperature <= 0`` rows, a categorical draw from the warped
+    distribution (one per-row ``key``) for the rest."""
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    probs = warp_probs(logits[:, None, :], temperature, top_k, top_p)[:, 0]
+    samp = jax.vmap(
+        lambda k, p: jax.random.categorical(k, jnp.log(p)))(keys, probs)
+    return jnp.where(temperature > 0, samp.astype(jnp.int32), greedy_tok)
+
+
+# ---------------------------------------------------------------------------
+# lossless rejection verification (seeded, per-row)
+# ---------------------------------------------------------------------------
+
+def _rejection_verify_row(key: Array, draft_tokens: Array, draft_probs: Array,
+                          target_probs: Array) -> Tuple[Array, Array]:
+    """One row: draft_tokens (K,), draft_probs (K, V), target_probs
+    (K+1, V); see :func:`rejection_verify`."""
+    K, V = draft_probs.shape
+    ks = jax.random.split(key, 3)
+    u = jax.random.uniform(ks[0], (K,))
+    ar = jnp.arange(K)
+    q_d = draft_probs[ar, draft_tokens]
+    p_d = target_probs[ar, draft_tokens]
+    # accept token i w.p. min(1, p/q): u < min(1, p/q) <=> u*q < p (u < 1
+    # always), with q == 0 handled exactly — no epsilon fudge
+    ok = u * q_d < p_d
+    accept_len = jnp.sum(jnp.cumprod(ok.astype(jnp.int32)))
+
+    # residual distribution at the first rejected slot: norm(max(p - q, 0)),
+    # renormalized explicitly — zero entries stay exactly zero (log 0 =
+    # -inf, never drawn); a fully-zero residual (p == q bitwise, so
+    # rejection there has probability 0) falls back to the target row
+    idx = jnp.minimum(accept_len, K - 1)
+    p_rej, q_rej = target_probs[idx], draft_probs[idx]
+    resid = jnp.maximum(p_rej - q_rej, 0.0)
+    mass = resid.sum()
+    resid = jnp.where(mass > 0, resid / jnp.where(mass > 0, mass, 1.0), p_rej)
+    resample = jax.random.categorical(ks[1], jnp.log(resid))
+
+    bonus = jax.random.categorical(ks[2], jnp.log(target_probs[K]))
+
+    committed = jnp.where(ar < accept_len, draft_tokens, 0)
+    committed = jnp.append(committed, 0).astype(jnp.int32)
+    fix = jnp.where(accept_len == K, bonus, resample).astype(jnp.int32)
+    committed = committed.at[accept_len].set(fix)
+    return accept_len, committed
+
+
+def rejection_verify_rows(keys: Array, draft_tokens: Array,
+                          draft_probs: Array,
+                          target_probs: Array) -> Tuple[Array, Array]:
+    """Lossless stochastic verification with PER-ROW keys (B, 2) uint32 —
+    the serving path: each request's key is derived from its own
+    ``SamplingParams.seed`` (serving/sampling.py), so a row's outcome is
+    independent of batch composition and slot index.
+
+    draft_tokens (B, K); draft_probs (B, K, V) — drafter distributions;
+    target_probs (B, K+1, V). Token i accepted w.p. min(1, p_i(d_i) /
+    q_i(d_i)); on first rejection the replacement is sampled from
+    norm(max(p - q, 0)); if all accepted, bonus ~ p_K.
 
     Returns (accept_len (B,), committed (B, K+1)).
     """
-    B, K, V = draft_probs.shape
-    ks = jax.random.split(key, 3)
-    u = jax.random.uniform(ks[0], (B, K))
-    q_d = jnp.take_along_axis(draft_probs, draft_tokens[..., None],
-                              axis=-1)[..., 0]
-    p_d = jnp.take_along_axis(target_probs[:, :K], draft_tokens[..., None],
-                              axis=-1)[..., 0]
-    ok = u < jnp.minimum(1.0, p_d / jnp.maximum(q_d, 1e-20))
-    accept_len = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+    return jax.vmap(_rejection_verify_row)(keys, draft_tokens, draft_probs,
+                                           target_probs)
 
-    # residual distribution at the first rejected slot
-    idx = jnp.minimum(accept_len, K - 1)
-    p_rej = jnp.take_along_axis(target_probs, idx[:, None, None], axis=1)[:, 0]
-    q_rej = jnp.take_along_axis(draft_probs, idx[:, None, None], axis=1)[:, 0]
-    resid = jnp.maximum(p_rej - q_rej, 0.0)
-    resid = resid / jnp.maximum(resid.sum(-1, keepdims=True), 1e-20)
-    resample = jax.random.categorical(ks[1], jnp.log(resid + 1e-20), axis=-1)
 
-    bonus = jax.random.categorical(
-        ks[2], jnp.log(target_probs[:, K] + 1e-20), axis=-1)
+def rejection_verify(key: Array, draft_tokens: Array, draft_probs: Array,
+                     target_probs: Array) -> Tuple[Array, Array]:
+    """Whole-batch convenience wrapper: split ``key`` into per-row keys and
+    verify (see :func:`rejection_verify_rows`)."""
+    B = draft_tokens.shape[0]
+    return rejection_verify_rows(jax.random.split(key, B), draft_tokens,
+                                 draft_probs, target_probs)
 
-    committed = jnp.where(
-        jnp.arange(K + 1)[None, :] < accept_len[:, None],
-        jnp.pad(draft_tokens, ((0, 0), (0, 1))), 0).astype(jnp.int32)
-    fix = jnp.where(accept_len == K, bonus, resample).astype(jnp.int32)
-    committed = committed.at[jnp.arange(B), accept_len].set(fix)
-    return accept_len, committed
 
+def mixed_verify(keys: Array, draft_tokens: Array, draft_probs: Array,
+                 target_logits: Array, temperature: Array, top_k: Array,
+                 top_p: Array) -> Tuple[Array, Array]:
+    """Per-row mixed-policy verification inside ONE jitted step.
+
+    ``temperature == 0`` rows take the exact greedy prefix-match path on the
+    RAW target logits (bit-identical to the pre-SamplingParams engine);
+    sampled rows run seeded rejection verification of ``draft_tokens``
+    against the row-warped target distribution.
+
+    ``draft_probs`` (B, K, V) must be the distribution the drafts were
+    ACTUALLY drawn from — that is what makes rejection sampling lossless.
+    This repo's drafters emit argmax drafts (a deterministic proposal), so
+    the engine passes a one-hot: acceptance then reduces to ``u < p(d)``
+    and the residual to ``norm(p masked at d)``, which keeps the committed
+    distribution exactly the warped target. A future drafter that samples
+    its drafts should pass its own warped distribution here instead
+    (``warp_probs`` applies identically to drafter logits).
+
+    Returns (accept_len (B,), committed (B, K+1))."""
+    acc_g, t_star = greedy_verify(draft_tokens, target_logits)
+    p = warp_probs(target_logits, temperature, top_k, top_p)
+    acc_s, comm_s = rejection_verify_rows(keys, draft_tokens, draft_probs, p)
+    is_greedy = temperature <= 0
+    return (jnp.where(is_greedy, acc_g, acc_s),
+            jnp.where(is_greedy[:, None], t_star, comm_s))
+
+
+# ---------------------------------------------------------------------------
+# acceptance-length bookkeeping
+# ---------------------------------------------------------------------------
 
 def update_acceptance_stats(stats: dict, accept_len: Array,
                             active: Optional[Array] = None) -> dict:
     """Running mean of tokens committed per iteration (= accept_len + 1,
-    the paper's acceptance length)."""
+    the paper's acceptance length).
+
+    Safe under an all-False ``active`` mask: the update contributes zero
+    iterations and zero tokens, and the carried ``mean`` divides by
+    ``max(iters, 1)`` — never by ``sum(active) == 0`` — so an idle batch
+    cannot poison the running mean with NaN."""
     n = accept_len.shape[0] if active is None else jnp.sum(active)
     tok = accept_len + 1
     tok = tok if active is None else jnp.where(active, tok, 0)
-    return {"iters": stats.get("iters", 0) + n,
-            "tokens": stats.get("tokens", 0) + jnp.sum(tok)}
+    iters = stats.get("iters", 0) + n
+    tokens = stats.get("tokens", 0) + jnp.sum(tok)
+    return {"iters": iters, "tokens": tokens,
+            "mean": tokens / jnp.maximum(jnp.asarray(iters), 1)}
 
 
 def acceptance_length(stats: dict) -> float:

@@ -5,6 +5,14 @@ per-request and aggregate OTPS / acceptance / latency stats.
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
         --ckpt results/ckpt --mode parallel --k 5 --requests 12
 
+``--temperature/--top-p/--top-k/--seed`` set the per-request decoding
+policy (serving/sampling.SamplingParams): temperature 0 (default) is greedy
+verification; temperature > 0 runs seeded lossless rejection sampling
+against the warped target distribution, each request on its own
+deterministic PRNG stream (``seed + i``, bitwise reproducible across runs
+and slot placements). ``--mixed-sampling`` alternates greedy and sampled
+requests through ONE batch — the mixed-policy step the redesign enables.
+
 ``--mean-gap G`` spaces request arrivals by Exp(G) gaps on the scheduler's
 deterministic virtual clock (0 = everything arrives at t=0); async runs
 report virtual-time p50/p99 latency and queue wait plus preemption counts.
@@ -35,8 +43,8 @@ from repro.checkpoint import load_pytree
 from repro.configs import DrafterConfig, get_config
 from repro.core import drafter as D
 from repro.models import get_model
-from repro.serving import (Engine, EngineConfig, Request, Scheduler,
-                           serve_round_based)
+from repro.serving import (Engine, EngineConfig, Request, SamplingParams,
+                           Scheduler, serve_round_based)
 from repro.sharding.utils import serving_mesh
 
 
@@ -53,6 +61,19 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy "
+                         "verification, the lossless-vs-AR default)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 disables)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k filter (0 disables)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base sampling seed; request i uses seed + i "
+                         "(deterministic per-request PRNG streams)")
+    ap.add_argument("--mixed-sampling", action="store_true",
+                    help="alternate greedy and sampled requests in one "
+                         "batch (even i greedy, odd i at --temperature)")
     ap.add_argument("--sync-every", type=int, default=1,
                     help="speculative iterations between scheduler host syncs")
     ap.add_argument("--round-based", action="store_true",
@@ -84,6 +105,11 @@ def main():
                          "(model,) mesh of N devices (0 = single-device); "
                          "lossless — output is token-for-token identical")
     args = ap.parse_args()
+    if args.mixed_sampling and args.temperature <= 0:
+        raise SystemExit(
+            "--mixed-sampling alternates greedy and sampled requests, but "
+            "--temperature is 0 (greedy) so every request would be greedy; "
+            "pass --temperature > 0, e.g. --temperature 0.8")
     if args.shard_model > jax.device_count():
         raise SystemExit(
             f"--shard-model {args.shard_model} needs {args.shard_model} "
@@ -144,6 +170,20 @@ def main():
             "--round-based is a whole-batch loop without per-request "
             "extras; serve vlm/encdec through the scheduler (default)")
 
+    def params_for(i: int):
+        if args.temperature <= 0 or (args.mixed_sampling and i % 2 == 0):
+            return SamplingParams.greedy(seed=args.seed + i)
+        return SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p,
+                              seed=args.seed + i)
+    sps = [params_for(i) for i in range(args.requests)]
+    n_sampled = sum(not sp.is_greedy for sp in sps)
+    if n_sampled:
+        print(f"sampling: {n_sampled}/{args.requests} requests at "
+              f"T={args.temperature} top_k={args.top_k} top_p={args.top_p} "
+              f"(seeds {args.seed}..{args.seed + args.requests - 1}; "
+              "deterministic per-request streams)")
+
     # vlm/encdec requests need no explicit extras here: admission
     # synthesizes deterministic per-prompt stub frontend inputs (real
     # deployments attach actual vision/audio features via Request.extras)
@@ -151,8 +191,10 @@ def main():
                       preempt=False if args.no_preempt else None)
     rep = None
     for _ in range(2):      # second run = warm, compile excluded
-        rep = sched.serve([Request(p, max_new_tokens=b, arrival_time=a)
-                           for p, b, a in zip(prompts, budgets, arrivals)])
+        rep = sched.serve([Request(p, max_new_tokens=b, arrival_time=a,
+                                   sampling=sp)
+                           for p, b, a, sp in zip(prompts, budgets, arrivals,
+                                                  sps)])
     print(f"mode={args.mode} K={args.k} batch={args.batch} "
           f"requests={rep['n_requests']}: OTPS={rep['otps']:.1f} "
           f"AL={rep['mean_acceptance_length']:.2f} "

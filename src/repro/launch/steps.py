@@ -225,7 +225,7 @@ def build_serve_step(tcfg: ModelConfig, dcfg: DrafterConfig,
     model = get_model(tcfg)
     GB, S = shape.global_batch, shape.seq_len
     max_len = S + 64
-    ecfg = EngineConfig(K=K, max_new_tokens=1 << 30, greedy=True,
+    ecfg = EngineConfig(K=K, max_new_tokens=1 << 30,
                         drafter_mode=drafter_mode,
                         cache_dtype="bfloat16", max_len=max_len)
 
@@ -256,7 +256,11 @@ def build_serve_step(tcfg: ModelConfig, dcfg: DrafterConfig,
                 "new_count": spec_for((GB,), bsp[0]),
                 "slot_iters": spec_for((GB,), bsp[0]),
                 "iters": P(), "row_iters": P(), "committed": P(),
-                "rng": P(),
+                # per-slot decoding-policy rows (serving/sampling.py)
+                "sampling": {"temperature": spec_for((GB,), bsp[0]),
+                             "top_k": spec_for((GB,), bsp[0]),
+                             "top_p": spec_for((GB,), bsp[0]),
+                             "key": spec_for((GB, 2), bsp[0])},
             }
             state_sh = {}
             for k in state_sds:

@@ -1,7 +1,10 @@
 from repro.serving.engine import Engine, EngineConfig
-from repro.serving.scheduler import Request, Scheduler, serve_round_based
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import (LLMEngine, Request, Scheduler,
+                                     serve_round_based)
 from repro.serving import cache_ops
 from repro.serving.cache_ops import BlockAllocator
 
-__all__ = ["BlockAllocator", "Engine", "EngineConfig", "Request",
-           "Scheduler", "serve_round_based", "cache_ops"]
+__all__ = ["BlockAllocator", "Engine", "EngineConfig", "LLMEngine",
+           "Request", "SamplingParams", "Scheduler", "serve_round_based",
+           "cache_ops"]

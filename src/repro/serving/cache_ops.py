@@ -105,7 +105,7 @@ def batch_axes(tree_b1, tree_b2):
     same pytree built at two different batch sizes (jax.eval_shape — no device
     work). Returns a matching pytree of ints: the first axis whose extent
     differs, or ``NO_BATCH`` for leaves without a batch dimension (scalar
-    counters, rng keys, ring flags)."""
+    counters, ring flags)."""
     def ax(a, b):
         for i, (x, y) in enumerate(zip(a.shape, b.shape)):
             if x != y:
@@ -117,7 +117,7 @@ def batch_axes(tree_b1, tree_b2):
 def write_slot(dst, src, slot: Array, axes):
     """Scatter batch row 0 of ``src`` (a batch-1 state/cache pytree) into
     batch row ``slot`` of ``dst``. Leaves without a batch axis (``axes`` leaf
-    == NO_BATCH: scalar counters, rng, ring flags) keep their dst value.
+    == NO_BATCH: scalar counters, ring flags) keep their dst value.
     jit-friendly: ``slot`` may be traced; ``axes`` must be static."""
     def w(d, s, ax):
         if ax < 0:

@@ -11,9 +11,16 @@ Three drafter modes:
   "ar"       — AR EAGLE-3 baseline: K sequential drafter forwards
   "none"     — vanilla autoregressive decoding (1 target forward per token)
 
-Verification is greedy (prefix match) or lossless rejection sampling.
-Greedy + "parallel"/"ar" reproduces target-greedy output exactly — the
-losslessness property tests rely on this.
+Verification policy is PER REQUEST (serving/sampling.py): every slot
+carries its own ``SamplingParams`` row — temperature / top-k / top-p and a
+deterministic PRNG stream derived from the request's seed — and one jitted
+step runs greedy prefix matching for ``temperature == 0`` rows and seeded
+lossless rejection sampling against the row-warped target distribution for
+the rest (core/spec_decode.mixed_verify). Greedy rows + "parallel"/"ar"
+reproduce target-greedy output exactly, and sampled rows are a pure
+function of ``(seed, committed prefix)`` — the losslessness and
+determinism property tests rely on both. There is no engine-global
+verification RNG.
 
 Model sharding (``EngineConfig(shard_model=True)``) spreads the engine's
 resident state — weights and full-length KV, contiguous rows or page pools
@@ -26,7 +33,9 @@ losslessness argument and layout table.
 """
 from __future__ import annotations
 
+import functools
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -40,6 +49,9 @@ from repro.core import drafter as D
 from repro.core import spec_decode as SD
 from repro.models import get_model
 from repro.serving import cache_ops
+from repro.serving.sampling import (SamplingParams, batch_sampling_state,
+                                    blank_sampling_state, sampling_state_sds,
+                                    step_keys)
 from repro.sharding import rules as shard_rules
 from repro.sharding.utils import replicate_tree, serving_mesh
 
@@ -54,10 +66,16 @@ class EngineConfig:
       K: speculation depth — tokens drafted per iteration (ignored when
         ``drafter_mode == "none"``).
       max_new_tokens: default per-request generation budget; the scheduler
-        may override it per request (``Request.max_new_tokens``).
-      greedy: greedy prefix-match verification (token-for-token lossless vs
-        target-greedy decoding) when True; lossless rejection sampling when
-        False (preemption is then unavailable — see Scheduler).
+        may override it per request (``Request.max_new_tokens`` /
+        ``SamplingParams.max_new_tokens``).
+      sampling: default :class:`SamplingParams` for slots/requests that do
+        not carry their own (whole-batch ``prefill``/``run``, and
+        ``Request``s without an explicit policy). The default is greedy
+        verification — token-for-token lossless vs target-greedy decoding.
+      greedy: DEPRECATED alias (emits ``DeprecationWarning``): ``True``
+        constructs ``SamplingParams.greedy()``, ``False`` a temperature-1.0
+        seeded ``SamplingParams``. Pass per-request ``SamplingParams``
+        instead.
       drafter_mode: "parallel" (P-EAGLE), "ar" (EAGLE-3 baseline) or "none"
         (vanilla AR decoding, one target forward per token).
       cache_dtype: KV/state cache dtype ("bfloat16" on accelerators).
@@ -66,7 +84,7 @@ class EngineConfig:
     """
     K: int = 5                       # speculation depth (drafted tokens/iter)
     max_new_tokens: int = 64
-    greedy: bool = True
+    greedy: Optional[bool] = None    # DEPRECATED → sampling (see below)
     drafter_mode: str = "parallel"   # parallel | ar | none
     cache_dtype: str = "float32"     # bfloat16 on accelerators
     max_len: int = 512               # total positions per slot
@@ -106,18 +124,43 @@ class EngineConfig:
     # and preemption never relayout the sharded pools.
     shard_model: bool = False
     mesh: Any = None                 # jax Mesh; None = serving_mesh()
+    # Engine-default decoding policy; per-request SamplingParams override it
+    # slot-by-slot through the scheduler. None = SamplingParams.greedy().
+    sampling: Optional[SamplingParams] = None
+
+    def __post_init__(self):
+        if self.greedy is not None:
+            warnings.warn(
+                "EngineConfig(greedy=...) is deprecated: decoding policy is "
+                "per-request now — pass SamplingParams (e.g. "
+                "Request(sampling=SamplingParams(temperature=0.8, seed=1)) "
+                "or EngineConfig(sampling=...)) instead",
+                DeprecationWarning, stacklevel=2)
+            if self.sampling is None:
+                object.__setattr__(
+                    self, "sampling",
+                    SamplingParams.greedy() if self.greedy
+                    else SamplingParams(temperature=1.0))
+        if self.sampling is None:
+            object.__setattr__(self, "sampling", SamplingParams.greedy())
+        # keep reads of .greedy meaningful for stragglers (no warning)
+        object.__setattr__(self, "greedy", self.sampling.is_greedy)
 
 
 def make_decode_state(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
                       ecfg: EngineConfig, batch: int, *,
                       cache_dtype=None, taps_dtype=None,
                       last_fill: int = 0, new_count_fill: int = 1,
-                      rng: Optional[Array] = None) -> dict:
+                      sampling: Optional[dict] = None) -> dict:
     """The ONE definition of the decode-state skeleton (keys + shapes).
 
     Engine prefill, Engine.blank_state, and the dry-run's serve_step state
     template (launch/steps.py) all build from this, so a new state leaf added
-    for speculative_step can't silently go missing at one of the sites."""
+    for speculative_step can't silently go missing at one of the sites.
+
+    ``sampling`` is the per-slot decoding-policy subtree
+    (serving/sampling.batch_sampling_state); None fills every slot with the
+    engine-default ``ecfg.sampling``."""
     cdt = jnp.dtype(ecfg.cache_dtype) if cache_dtype is None else cache_dtype
     state = {
         "tokens": jnp.zeros((batch, ecfg.max_len), jnp.int32),
@@ -130,7 +173,8 @@ def make_decode_state(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
         "iters": jnp.zeros((), jnp.int32),
         "row_iters": jnp.zeros((), jnp.int32),
         "committed": jnp.zeros((), jnp.int32),
-        "rng": rng if rng is not None else jax.random.PRNGKey(0),
+        "sampling": (sampling if sampling is not None
+                     else batch_sampling_state(ecfg.sampling, batch)),
     }
     if ecfg.drafter_mode != "none":
         state["dcache"] = D.make_cache(dcfg, batch, ecfg.max_len, dtype=cdt)
@@ -175,6 +219,10 @@ class Engine:
             self.pool_pages = ecfg.pool_pages or batch * self.pages_per_slot
             self.allocator = cache_ops.BlockAllocator(self.pool_pages)
             self._slot_pages: List[List[int]] = [[] for _ in range(batch)]
+        # host-side mirror of each slot's policy (sampled vs greedy) — set
+        # at admission, cleared on free; lets step() pick the greedy-only
+        # trace when nothing in the batch samples (purely a perf choice)
+        self._slot_sampled = [False] * batch
         self._slot_axes = None
         self._paged_axes = None
         self._pspec = None
@@ -213,14 +261,24 @@ class Engine:
         the unsharded engine). No-op without a mesh."""
         return tree if self.mesh is None else replicate_tree(tree, self.mesh)
 
+    @staticmethod
+    def _greedy_twins(fn, **jit_kwargs):
+        """{greedy_only: jitted fn} — every step entry point gets a
+        greedy-only twin (static greedy_only=True trace: no warp sorts, no
+        categorical draws, the pre-SamplingParams per-step cost);
+        ``Engine.step`` picks a twin host-side per call. Both twins emit
+        identical tokens for greedy rows, so the choice is purely perf."""
+        return {g: jax.jit(functools.partial(fn, greedy_only=g),
+                           **jit_kwargs) for g in (False, True)}
+
     def _build_jits(self):
         if self.mesh is None:
-            self._step = jax.jit(self._step_impl)
+            self._step = self._greedy_twins(self._step_impl)
             self._prefill = jax.jit(self._prefill_impl)
             self._prefill_pad = jax.jit(self._prefill_pad_impl)
             self._chunk = jax.jit(self._chunk_impl)
-            self._sched_step = jax.jit(self._sched_step_impl)
-            self._paged_step = jax.jit(self._paged_step_impl)
+            self._sched_step = self._greedy_twins(self._sched_step_impl)
+            self._paged_step = self._greedy_twins(self._paged_step_impl)
             self._admit = jax.jit(self._admit_impl)
             self._paged_admit = jax.jit(self._paged_admit_impl)
             self._free = jax.jit(self._free_impl)
@@ -237,8 +295,9 @@ class Engine:
         # the same tree serves every batch size (specs touch trailing dims)
         csh = self.state_shardings
         jj = jax.jit
-        self._step = jj(self._step_impl, in_shardings=(tp, dp, csh),
-                        out_shardings=csh)
+        self._step = self._greedy_twins(self._step_impl,
+                                        in_shardings=(tp, dp, csh),
+                                        out_shardings=csh)
         self._prefill = jj(self._prefill_impl,
                            in_shardings=(tp, dp, rp, rp, rp),
                            out_shardings=csh)
@@ -248,10 +307,11 @@ class Engine:
         self._chunk = jj(self._chunk_impl,
                          in_shardings=(tp, dp, csh, rp, rp),
                          out_shardings=csh)
-        self._sched_step = jj(self._sched_step_impl,
-                              in_shardings=(tp, dp, csh, rp, rp),
-                              out_shardings=csh)
-        self._admit = jj(self._admit_impl, in_shardings=(csh, csh, rp),
+        self._sched_step = self._greedy_twins(
+            self._sched_step_impl, in_shardings=(tp, dp, csh, rp, rp),
+            out_shardings=csh)
+        self._admit = jj(self._admit_impl,
+                         in_shardings=(csh, csh, rp, rp, rp),
                          out_shardings=csh)
         self._free = jj(self._free_impl, in_shardings=(csh, rp),
                         out_shardings=csh)
@@ -260,11 +320,11 @@ class Engine:
             # positions pools, block tables, per-slot rows replicate —
             # admission/free/growth are then sharded-local data movement
             psh = self.paged_state_shardings
-            self._paged_step = jj(self._paged_step_impl,
-                                  in_shardings=(tp, dp, psh, rp, rp),
-                                  out_shardings=psh)
+            self._paged_step = self._greedy_twins(
+                self._paged_step_impl, in_shardings=(tp, dp, psh, rp, rp),
+                out_shardings=psh)
             self._paged_admit = jj(self._paged_admit_impl,
-                                   in_shardings=(psh, csh, rp, rp),
+                                   in_shardings=(psh, csh, rp, rp, rp, rp),
                                    out_shardings=psh)
             self._paged_free = jj(self._paged_free_impl,
                                   in_shardings=(psh, rp), out_shardings=psh)
@@ -274,16 +334,21 @@ class Engine:
     # ------------------------------------------------------------------
     # prefill
     # ------------------------------------------------------------------
-    def _prefill_impl(self, tparams, dparams, prompts, extras, rng):
+    def _prefill_impl(self, tparams, dparams, prompts, extras, samp):
         tparams, dparams = self._rep(tparams), self._rep(dparams)
         B, P = prompts.shape
         state = make_decode_state(self.model, self.tcfg, self.dcfg,
-                                  self.ecfg, B, rng=rng)
+                                  self.ecfg, B, sampling=samp)
         out = self.model.forward(tparams, prompts, mode="prefill",
                                  cache=state["tcache"], collect_taps=True,
                                  head_last_only=True, **extras)
         fused = P + self.pos_offset          # positions 0..fused-1 committed
-        first = jnp.argmax(out.logits[:, -1], axis=-1).astype(jnp.int32)
+        # first generated token: argmax for greedy rows; for sampled rows a
+        # seeded draw from the warped target distribution, keyed by the
+        # position it determines (fold_in(seed, fused) — see sampling.py)
+        first = SD.sample_token(step_keys(samp, fused), out.logits[:, -1],
+                                samp["temperature"], samp["top_k"],
+                                samp["top_p"])
 
         tokens = state["tokens"]
         tokens = tokens.at[:, self.pos_offset:self.pos_offset + P].set(prompts)
@@ -310,7 +375,7 @@ class Engine:
         return self._rep(state)
 
     def prefill(self, prompts: Array, extras: Optional[dict] = None,
-                rng: Optional[Array] = None):
+                sampling: Optional[SamplingParams] = None):
         """Whole-batch prefill: build a fresh decode state for ``prompts``
         (B, P), committing one generated token per row.
 
@@ -319,20 +384,23 @@ class Engine:
             admission with varied lengths goes through ``prefill_into_slot``.
           extras: optional modality inputs (vision/encoder embeds, leading
             batch axis B) forwarded to the target's prefill.
-          rng: PRNG key for sampled verification (default: PRNGKey(0)).
+          sampling: decoding policy applied to every row (default: the
+            engine's ``ecfg.sampling``). Per-request policies go through
+            the Scheduler (``Request(sampling=...)``).
 
         Returns:
           A decode-state dict (see ``make_decode_state``) ready for
           ``step``; under shard_model its KV leaves are placed sharded."""
+        B = prompts.shape[0]
+        samp = batch_sampling_state(sampling or self.ecfg.sampling, B)
         return self._prefill(self.tparams, self.dparams, prompts,
-                             extras or {}, rng if rng is not None
-                             else jax.random.PRNGKey(0))
+                             extras or {}, samp)
 
     # ------------------------------------------------------------------
     # bucketed admission prefill (one trace per power-of-two bucket)
     # ------------------------------------------------------------------
     def _prefill_pad_impl(self, tparams, dparams, prompts, true_len, extras,
-                          rng):
+                          samp):
         """Attention-family bucketed prefill: ``prompts`` (B, Pb) is the
         prompt right-padded to a power-of-two bucket, ``true_len`` the traced
         real length. Causal attention makes right-pads inert for every real
@@ -342,13 +410,15 @@ class Engine:
         tparams, dparams = self._rep(tparams), self._rep(dparams)
         B, Pb = prompts.shape
         state = make_decode_state(self.model, self.tcfg, self.dcfg,
-                                  self.ecfg, B, rng=rng)
+                                  self.ecfg, B, sampling=samp)
         fused = true_len + self.pos_offset       # positions 0..fused-1 real
         hp = jnp.broadcast_to(fused - 1, (B,)).astype(jnp.int32)
         out = self.model.forward(tparams, prompts, mode="prefill",
                                  cache=state["tcache"], collect_taps=True,
                                  head_positions=hp, **extras)
-        first = jnp.argmax(out.logits[:, 0], axis=-1).astype(jnp.int32)
+        first = SD.sample_token(step_keys(samp, fused), out.logits[:, 0],
+                                samp["temperature"], samp["top_k"],
+                                samp["top_p"])
         taps_last = jnp.take_along_axis(out.taps, hp[:, None, None],
                                         axis=1)[:, 0]
 
@@ -393,8 +463,11 @@ class Engine:
         out = self.model.forward(tparams, chunk, mode="decode",
                                  positions=positions, cache=state["tcache"],
                                  collect_taps=True, head_last_only=True)
-        first = jnp.argmax(out.logits[:, -1], axis=-1).astype(jnp.int32)
         fused = start + off + c
+        samp = state["sampling"]
+        first = SD.sample_token(step_keys(samp, fused), out.logits[:, -1],
+                                samp["temperature"], samp["top_k"],
+                                samp["top_p"])
         tokens = jax.lax.dynamic_update_slice(state["tokens"], chunk,
                                               (0, start + off))
         tokens = tokens.at[jnp.arange(B), fused].set(first)
@@ -436,22 +509,24 @@ class Engine:
             tpl = jax.eval_shape(
                 self._prefill_impl, self.tparams, self.dparams,
                 jax.ShapeDtypeStruct((1, 4), jnp.int32), {},
-                jax.ShapeDtypeStruct((2,), jnp.uint32))
+                sampling_state_sds(1))
             self._pad_unsafe = (
                 self.tcfg.family in ("ssm", "hybrid")
                 or cache_ops.has_ring_cache(tpl["tcache"], self.ecfg.max_len))
         return self._pad_unsafe
 
-    def _admission_prefill(self, prompt, extras, rng):
-        """Batch-1 prefill for slot admission, bucketed per EngineConfig."""
+    def _admission_prefill(self, prompt, extras, samp):
+        """Batch-1 prefill for slot admission, bucketed per EngineConfig.
+        ``samp`` is the request's device-side sampling row
+        (batch_sampling_state at batch 1)."""
         P = int(prompt.shape[1])
         if not self.ecfg.bucket_prefill:
             return self._prefill(self.tparams, self.dparams, prompt, extras,
-                                 rng)
+                                 samp)
         if self._chunk_only():
             sizes = self.prefill_buckets(P)
             state = self._prefill(self.tparams, self.dparams,
-                                  prompt[:, :sizes[0]], extras, rng)
+                                  prompt[:, :sizes[0]], extras, samp)
             start = sizes[0]
             for c in sizes[1:]:
                 state = self._chunk(self.tparams, self.dparams, state,
@@ -464,18 +539,19 @@ class Engine:
             # bucket would pad past the cache (long recompute-prefill
             # resumes, vlm offsets): take the exact-length trace instead
             return self._prefill(self.tparams, self.dparams, prompt, extras,
-                                 rng)
+                                 samp)
         padded = jnp.pad(prompt, ((0, 0), (0, Pb - P)))
         return self._prefill_pad(self.tparams, self.dparams, padded,
-                                 jnp.asarray(P, jnp.int32), extras, rng)
+                                 jnp.asarray(P, jnp.int32), extras, samp)
 
     # ------------------------------------------------------------------
     # one speculative iteration
     # ------------------------------------------------------------------
-    def _step_impl(self, tparams, dparams, state):
+    def _step_impl(self, tparams, dparams, state, greedy_only=False):
         tparams, dparams = self._rep(tparams), self._rep(dparams)
         out = speculative_step(self.model, self.tcfg, self.dcfg, self.ecfg,
-                               tparams, dparams, self._rep(state))
+                               tparams, dparams, self._rep(state),
+                               greedy_only=greedy_only)
         return self._rep(out)
 
     # ------------------------------------------------------------------
@@ -491,7 +567,7 @@ class Engine:
                 return jax.eval_shape(
                     self._prefill_impl, self.tparams, self.dparams,
                     jax.ShapeDtypeStruct((b, 4), jnp.int32), {},
-                    jax.ShapeDtypeStruct((2,), jnp.uint32))
+                    sampling_state_sds(b))
             self._slot_axes = cache_ops.batch_axes(pf(1), pf(2))
         return self._slot_axes
 
@@ -504,7 +580,7 @@ class Engine:
             self._contig_tpl = jax.eval_shape(
                 self._prefill_impl, self.tparams, self.dparams,
                 jax.ShapeDtypeStruct((self.batch, 4), jnp.int32), {},
-                jax.ShapeDtypeStruct((2,), jnp.uint32))
+                sampling_state_sds(self.batch))
         return self._contig_tpl
 
     @property
@@ -561,17 +637,19 @@ class Engine:
                 shard_rules.serve_state_specs(tpl, self.mesh))
         return self._paged_sh
 
-    def blank_state(self, rng: Optional[Array] = None) -> dict:
+    def blank_state(self) -> dict:
         """An all-idle batch state: empty caches (positions -1), zero tokens,
         every slot frozen (new_count == max_new_tokens so the budget check
-        keeps it inert). Slots come alive via ``prefill_into_slot``. In the
+        keeps it inert). Slots come alive via ``prefill_into_slot``, which
+        also scatters the request's per-slot sampling-policy row. In the
         paged layout, full-length KV leaves are page pools and the state
         carries a per-slot ``block_table`` (B, max_len/page_size), all -1."""
         sds = self._abstract_state()
         state = make_decode_state(
             self.model, self.tcfg, self.dcfg, self.ecfg, self.batch,
             taps_dtype=sds["taps_last"].dtype,
-            new_count_fill=self.ecfg.max_new_tokens, rng=rng)
+            new_count_fill=self.ecfg.max_new_tokens,
+            sampling=blank_sampling_state(self.batch))
         if self.paged:
             state = cache_ops.paged_state(state, self.pspec,
                                           self.ecfg.page_size,
@@ -670,12 +748,14 @@ class Engine:
 
     def prefill_into_slot(self, state: dict, prompt, slot: int,
                           extras: Optional[dict] = None,
-                          rng: Optional[Array] = None,
-                          max_new: Optional[int] = None):
+                          sampling: Optional[SamplingParams] = None,
+                          max_new: Optional[int] = None,
+                          resume: bool = False):
         """Admit one request into batch row ``slot`` of a live state: prefill
         the prompt as a batch-1 state (bucketed to power-of-two lengths when
         ``bucket_prefill``), then scatter every batched leaf's row into the
-        slot (cache_ops.write_slot). Neighbor slots are untouched — rows are
+        slot (cache_ops.write_slot) — including the request's per-slot
+        ``sampling`` policy row. Neighbor slots are untouched — rows are
         independent through attention, caches, and verification, so
         mid-stream admission cannot perturb already-decoding requests.
 
@@ -686,19 +766,43 @@ class Engine:
         claim covers only prompt + one speculative block, and the scheduler
         calls ``ensure_capacity`` before each step as the slot grows.
 
-        Returns (new_state, first_token, last_pos): the prefill already
-        commits one token (new_count starts at 1 for the slot)."""
+        ``resume=False`` (fresh admission): the prefill commits one token —
+        greedy rows by argmax, sampled rows by a seeded draw from the warped
+        target distribution — and returns ``(new_state, first_token,
+        last_pos)`` with new_count starting at 1.
+
+        ``resume=True`` (recompute-prefill of a preempted SAMPLED request,
+        ``prompt`` = original prompt + tokens generated before eviction):
+        the engine prefills ``prompt[:-1]`` like a fresh admission but
+        FORCES the committed token to ``prompt[-1]`` — already known, not
+        re-sampled — and starts the slot's committed count at 0. The slot
+        then holds exactly the state an uninterrupted run has at a step
+        boundary (caches forwarded through the second-to-last prefix token,
+        the final token committed-but-not-yet-verified), so the next
+        speculative step restarts verification at the same committed prefix
+        and re-derives the same ``fold_in(seed, position)`` keys — replaying
+        the uninterrupted tokens exactly. Returns ``(new_state, None,
+        last_pos)``. (Greedy resumes don't need this: their
+        prefill-committed argmax token equals the verify path's token by
+        construction.)"""
         prompt = jnp.asarray(prompt, jnp.int32)[None]
-        src = self._admission_prefill(prompt, extras or {},
-                                      rng if rng is not None
-                                      else jax.random.PRNGKey(0))
+        res_tok = jnp.asarray(0, jnp.int32)
+        if resume:
+            prompt, res_tok = prompt[:, :-1], prompt[0, -1]
+        sp = sampling or self.ecfg.sampling
+        self._slot_sampled[slot] = not sp.is_greedy
+        samp = batch_sampling_state(sp, 1)
+        src = self._admission_prefill(prompt, extras or {}, samp)
+        res = jnp.asarray(1 if resume else 0, jnp.int32)
         if not self.paged:
-            state = self._admit(state, src, jnp.asarray(slot, jnp.int32))
+            state = self._admit(state, src, jnp.asarray(slot, jnp.int32),
+                                res, res_tok)
         else:
             if self._slot_pages[slot]:
                 raise RuntimeError(f"slot {slot} still holds pages; "
                                    "free_slot it before re-admission")
-            n = self.initial_pages(int(prompt.shape[1]), max_new)
+            n = self.initial_pages(int(prompt.shape[1]) + (1 if resume
+                                                           else 0), max_new)
             pages = self.allocator.alloc(n)
             if pages is None:
                 raise RuntimeError(
@@ -709,18 +813,39 @@ class Engine:
             row[:n] = pages
             state = self._paged_admit(state, src,
                                       jnp.asarray(slot, jnp.int32),
-                                      jnp.asarray(row))
+                                      jnp.asarray(row), res, res_tok)
         last = int(src["last"][0])
+        if resume:
+            return state, None, last
         first = int(src["tokens"][0, last])
         return state, first, last
 
-    def _admit_impl(self, dst, src, slot):
-        return cache_ops.write_slot(dst, src, slot, self.slot_axes)
+    @staticmethod
+    def _resume_fixup(src, resume, res_tok):
+        """Turn a batch-1 admission prefill into a step-boundary resume when
+        ``resume`` (traced 0/1) is set: the token committed at ``last`` is
+        forced to ``res_tok`` (the prefix's final, already-emitted token —
+        the prefill's sampled/argmax draw is discarded) and the committed
+        count starts at 0, so nothing is harvested twice and the next step
+        verifies the prefix's true continuation."""
+        src = dict(src)
+        last = src["last"][0]
+        keep = src["tokens"][0, last]
+        src["tokens"] = src["tokens"].at[0, last].set(
+            jnp.where(resume > 0, res_tok, keep))
+        src["new_count"] = src["new_count"] * (1 - resume)
+        return src
 
-    def _paged_admit_impl(self, dst, src, slot, row):
+    def _admit_impl(self, dst, src, slot, resume, res_tok):
+        return cache_ops.write_slot(
+            dst, self._resume_fixup(src, resume, res_tok), slot,
+            self.slot_axes)
+
+    def _paged_admit_impl(self, dst, src, slot, row, resume, res_tok):
         core = {k: v for k, v in dst.items() if k != "block_table"}
-        core = cache_ops.admit_pages(core, src, slot, row, self.paged_axes,
-                                     self.pspec)
+        core = cache_ops.admit_pages(
+            core, self._resume_fixup(src, resume, res_tok), slot, row,
+            self.paged_axes, self.pspec)
         core["block_table"] = dst["block_table"].at[slot].set(row)
         return core
 
@@ -730,6 +855,7 @@ class Engine:
         admission. In the paged layout this also returns the slot's pages to
         the pool and blanks its block-table row — mandatory there, or the
         pool leaks; cosmetic for contiguous (admission fully overwrites)."""
+        self._slot_sampled[slot] = False
         if self.paged:
             self.allocator.free(self._slot_pages[slot])
             self._slot_pages[slot] = []
@@ -756,12 +882,23 @@ class Engine:
             jnp.full((self.pages_per_slot,), -1, jnp.int32))
         return core
 
+    def _mixed_policy(self) -> bool:
+        """Whether the next step needs the sampled verification lane: any
+        admitted slot carries a sampled policy, or the engine default is
+        sampled (whole-batch prefill states fill every row with it). False
+        selects the greedy-only trace — same tokens, pre-redesign cost."""
+        return any(self._slot_sampled) or not self.ecfg.sampling.is_greedy
+
     def step(self, state: dict, active: Optional[Array] = None,
              max_new: Optional[Array] = None) -> dict:
         """One jitted speculative iteration. Without arguments this is the
         legacy whole-batch step; the scheduler passes ``active`` (B,) bool and
         per-slot ``max_new`` (B,) int32. The paged layout always routes
-        through the gather→step→scatter wrapper."""
+        through the gather→step→scatter wrapper. Host-side, the engine picks
+        the mixed-policy or greedy-only trace of the step (``_mixed_policy``;
+        output-identical, the greedy twin just skips the sampled lane's
+        warps and draws)."""
+        g = not self._mixed_policy()              # twin key: greedy_only
         if self.paged:
             if "block_table" not in state:
                 raise ValueError(
@@ -774,28 +911,31 @@ class Engine:
                 active = jnp.ones((B,), bool)
             if max_new is None:
                 max_new = jnp.full((B,), self.ecfg.max_new_tokens, jnp.int32)
-            return self._paged_step(self.tparams, self.dparams, state,
-                                    jnp.asarray(active),
-                                    jnp.asarray(max_new, jnp.int32))
+            return self._paged_step[g](self.tparams, self.dparams, state,
+                                       jnp.asarray(active),
+                                       jnp.asarray(max_new, jnp.int32))
         if active is None and max_new is None:
-            return self._step(self.tparams, self.dparams, state)
+            return self._step[g](self.tparams, self.dparams, state)
         B = state["tokens"].shape[0]
         if active is None:
             active = jnp.ones((B,), bool)
         if max_new is None:
             max_new = jnp.full((B,), self.ecfg.max_new_tokens, jnp.int32)
-        return self._sched_step(self.tparams, self.dparams, state,
-                                jnp.asarray(active),
-                                jnp.asarray(max_new, jnp.int32))
+        return self._sched_step[g](self.tparams, self.dparams, state,
+                                   jnp.asarray(active),
+                                   jnp.asarray(max_new, jnp.int32))
 
-    def _sched_step_impl(self, tparams, dparams, state, active, max_new):
+    def _sched_step_impl(self, tparams, dparams, state, active, max_new,
+                         greedy_only=False):
         tparams, dparams = self._rep(tparams), self._rep(dparams)
         out = speculative_step(self.model, self.tcfg, self.dcfg, self.ecfg,
                                tparams, dparams, self._rep(state),
-                               active_mask=active, max_new=max_new)
+                               active_mask=active, max_new=max_new,
+                               greedy_only=greedy_only)
         return self._rep(out)
 
-    def _paged_step_impl(self, tparams, dparams, state, active, max_new):
+    def _paged_step_impl(self, tparams, dparams, state, active, max_new,
+                         greedy_only=False):
         """Paged twin of _sched_step_impl: reassemble each slot's pages into
         the contiguous per-slot view the step consumes (cache_ops.gather),
         run the identical speculative iteration, scatter the updated view
@@ -816,7 +956,8 @@ class Engine:
         view = self._rep(cache_ops.gather_state(core, table, self.pspec))
         view = speculative_step(self.model, self.tcfg, self.dcfg, self.ecfg,
                                 tparams, dparams, view,
-                                active_mask=active, max_new=max_new)
+                                active_mask=active, max_new=max_new,
+                                greedy_only=greedy_only)
         view = self._rep(view)
         core = cache_ops.scatter_state(core, view, table, self.pspec)
         core["block_table"] = table
@@ -838,9 +979,10 @@ class Engine:
         t_prefill = time.perf_counter() - t0
 
         iters = 0
+        g = self.ecfg.sampling.is_greedy        # whole-batch default policy
         t0 = time.perf_counter()
         while iters < max_iters:
-            state = self._step(self.tparams, self.dparams, state)
+            state = self._step[g](self.tparams, self.dparams, state)
             iters += 1
             if iters % 8 == 0 or iters < 2:
                 if bool(np.all(np.asarray(state["new_count"])
@@ -867,7 +1009,8 @@ class Engine:
 def speculative_step(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
                  ecfg: EngineConfig, tparams, dparams, state,
                  active_mask: Optional[Array] = None,
-                 max_new: Optional[Array] = None):
+                 max_new: Optional[Array] = None,
+                 greedy_only: bool = False):
     """One speculative iteration: draft K → verify K+1 → accept → commit.
 
     Pure function of (params, state) — shared by the Engine and by the
@@ -879,12 +1022,28 @@ def speculative_step(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
     behavior (all slots live, shared ``ecfg.max_new_tokens`` budget), so
     existing callers are unchanged. A masked row commits nothing and its
     last/taps/counters are frozen; its cache rows receive only garbage that
-    the next ``Engine.prefill_into_slot`` fully overwrites."""
+    the next ``Engine.prefill_into_slot`` fully overwrites.
+
+    Verification policy is per row (``state["sampling"]``, see
+    serving/sampling.py): ``temperature == 0`` rows take the exact greedy
+    argmax path on the raw target logits; the rest run seeded rejection
+    sampling against the row-warped drafter/target distributions, with the
+    row's key re-derived every step as ``fold_in(base_key, c + 1)`` — the
+    position of the first token the step determines — so a row's stream
+    depends only on its own ``(seed, committed prefix)``, never on batch
+    composition, slot index, or an engine-global RNG.
+
+    ``greedy_only`` (STATIC) traces the verification without the sampled
+    lane at all — no warping, no categorical draws — restoring the
+    pre-SamplingParams per-step cost. The Engine selects this trace
+    host-side whenever no admitted request is sampled; it is output-
+    identical to the mixed trace for all-greedy rows (the mixed trace's
+    greedy lane is the same argmax on the same raw logits)."""
     B = state["tokens"].shape[0]
     K = ecfg.K if ecfg.drafter_mode != "none" else 0
     c = state["last"]
     tok_next = jnp.take_along_axis(state["tokens"], c[:, None], axis=1)[:, 0]
-    rng, vrng = jax.random.split(state["rng"])
+    samp = state["sampling"]
 
     if ecfg.drafter_mode == "parallel":
         drafts, dlogits, dcache = D.draft_parallel(
@@ -907,13 +1066,25 @@ def speculative_step(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
 
     if K == 0:
         accept_len = jnp.zeros((B,), jnp.int32)
-        t_star = jnp.argmax(tout.logits, axis=-1).astype(jnp.int32)
-    elif ecfg.greedy:
+        if greedy_only:
+            t_star = jnp.argmax(tout.logits, axis=-1).astype(jnp.int32)
+        else:
+            t_star = SD.sample_token(step_keys(samp, c + 1),
+                                     tout.logits[:, 0], samp["temperature"],
+                                     samp["top_k"], samp["top_p"])[:, None]
+    elif greedy_only:
         accept_len, t_star = SD.greedy_verify(drafts, tout.logits)
     else:
-        accept_len, t_star = SD.rejection_verify(
-            vrng, drafts, jax.nn.softmax(dlogits, axis=-1),
-            jax.nn.softmax(tout.logits, axis=-1))
+        # drafts are the drafter's argmax — a DETERMINISTIC proposal, so
+        # the distribution they were drawn from is a one-hot, and lossless
+        # rejection reduces to accept-with-p(d) / residual p-masked-at-d
+        # (passing the drafter softmax here would over-accept the drafter's
+        # argmax and bias the committed distribution)
+        q = jax.nn.one_hot(drafts, tout.logits.shape[-1],
+                           dtype=tout.logits.dtype)
+        accept_len, t_star = SD.mixed_verify(
+            step_keys(samp, c + 1), drafts, q, tout.logits,
+            samp["temperature"], samp["top_k"], samp["top_p"])
 
     budget = jnp.asarray(ecfg.max_new_tokens, jnp.int32) \
         if max_new is None else max_new
@@ -957,7 +1128,7 @@ def speculative_step(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
         iters=state["iters"] + jnp.any(active).astype(jnp.int32),
         row_iters=state["row_iters"] + jnp.sum(active.astype(jnp.int32)),
         committed=state["committed"] + jnp.sum(ncommit),
-        rng=rng,
+        sampling=samp,
     )
     if ecfg.drafter_mode != "none":
         new_state["dcache"] = dcache

@@ -1,0 +1,151 @@
+"""Per-request decoding policy: :class:`SamplingParams` and its device-side
+batch form.
+
+This is the serving stack's vLLM-style front-end contract: every request
+carries its own ``temperature`` / ``top_k`` / ``top_p`` / ``seed`` /
+``stop_token_ids`` / ``max_new_tokens``, and the engine verifies drafts
+against each request's *warped* target distribution losslessly (greedy rows
+— ``temperature == 0`` — take the exact argmax prefix-match path inside the
+same jitted step). There is no engine-global sampling mode and no shared
+RNG: ``EngineConfig(greedy=...)`` survives only as a deprecated alias that
+constructs a default ``SamplingParams``.
+
+Deterministic PRNG streams
+--------------------------
+Each request owns a counter-based key stream derived from its ``seed``:
+the key for the operation that determines the token(s) starting at cache
+position ``pos`` is ``fold_in(PRNGKey(seed), pos)``. Keys are re-derived
+from the base key every step — nothing is split-and-carried — so the
+sampled continuation is a pure function of ``(seed, committed prefix)``:
+
+- identical across runs, batch compositions, slot indices, KV layouts and
+  mesh sizes (verification is per-row; neighbours never touch the stream);
+- recompute-prefill preemption is token-for-token lossless for seeded
+  sampling too: the resumed slot restarts a verify step at the same
+  committed prefix the uninterrupted run had a step boundary at, re-derives
+  the same ``fold_in`` counter, and therefore replays the same tokens
+  (see ``Engine.prefill_into_slot(resume=True)`` and docs/serving.md).
+
+The batch form (:func:`batch_sampling_state`) lives inside the decode state
+as the ``"sampling"`` subtree of per-slot arrays, so admission scatters a
+request's policy into its slot through the same ``cache_ops.write_slot``
+surgery as every other per-slot leaf, and one jitted step serves any mix of
+greedy and sampled rows.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Decoding policy of ONE request (immutable, hashable).
+
+    Attributes:
+      temperature: softmax temperature. ``0.0`` selects greedy decoding
+        (exact argmax, no randomness consumed); must be ``>= 0``.
+      top_k: keep only the ``top_k`` highest-probability tokens before
+        renormalizing (``0`` disables). Ties at the k-th value are all kept,
+        so the warp is deterministic.
+      top_p: nucleus sampling — keep the smallest prefix of the
+        probability-sorted vocabulary whose mass reaches ``top_p``, then
+        renormalize. ``1.0`` disables; must be in ``(0, 1]``.
+      seed: base of the request's deterministic PRNG stream (see module
+        docstring). Same seed ⇒ bitwise-identical continuation.
+      stop_token_ids: per-request stop tokens; generation is trimmed at the
+        first occurrence (inclusive), in addition to the scheduler-level
+        ``eos_id``.
+      max_new_tokens: per-request generation budget; ``None`` defers to
+        ``Request.max_new_tokens`` and then the engine default.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    stop_token_ids: Tuple[int, ...] = ()
+    max_new_tokens: Optional[int] = None
+
+    def __post_init__(self):
+        if not (self.temperature >= 0.0 and math.isfinite(self.temperature)):
+            raise ValueError(f"temperature must be >= 0 and finite, got "
+                             f"{self.temperature!r}")
+        if not isinstance(self.top_k, int) or self.top_k < 0:
+            raise ValueError(f"top_k must be an int >= 0, got {self.top_k!r}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p!r}")
+        if not isinstance(self.seed, int):
+            raise ValueError(f"seed must be an int, got {self.seed!r}")
+        if self.max_new_tokens is not None and self.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {self.max_new_tokens!r}")
+        object.__setattr__(self, "stop_token_ids",
+                           tuple(int(t) for t in self.stop_token_ids))
+
+    @property
+    def is_greedy(self) -> bool:
+        """Greedy rows take the argmax verify path and consume no PRNG."""
+        return self.temperature == 0.0
+
+    @classmethod
+    def greedy(cls, **kw) -> "SamplingParams":
+        """The pre-redesign default: exact greedy decoding."""
+        return cls(temperature=0.0, **kw)
+
+    def base_key(self) -> Array:
+        """(2,) uint32 base PRNG key of this request's stream."""
+        return jax.random.PRNGKey(self.seed)
+
+
+def batch_sampling_state(sp: SamplingParams, batch: int) -> dict:
+    """Device-side batch form: per-slot policy arrays, every slot filled
+    with ``sp``. The ``"sampling"`` subtree of the decode state."""
+    return {
+        "temperature": jnp.full((batch,), sp.temperature, jnp.float32),
+        "top_k": jnp.full((batch,), sp.top_k, jnp.int32),
+        "top_p": jnp.full((batch,), sp.top_p, jnp.float32),
+        "key": jnp.tile(sp.base_key()[None, :], (batch, 1)),
+    }
+
+
+def blank_sampling_state(batch: int) -> dict:
+    """The inert all-zero policy row of a blank/freed slot — what
+    ``cache_ops.reset_slot`` (zero fill) restores, so freed slots compare
+    equal to a fresh blank state. temperature 0 keeps the row on the greedy
+    path (no randomness consumed); the degenerate top_p 0 is harmless (the
+    warp always keeps the top-1 token) and admission overwrites the whole
+    row before the slot ever goes active."""
+    return {
+        "temperature": jnp.zeros((batch,), jnp.float32),
+        "top_k": jnp.zeros((batch,), jnp.int32),
+        "top_p": jnp.zeros((batch,), jnp.float32),
+        "key": jnp.zeros((batch, 2), jnp.uint32),
+    }
+
+
+def sampling_state_sds(batch: int) -> dict:
+    """jax.ShapeDtypeStruct twin of :func:`batch_sampling_state` for
+    abstract (eval_shape) prefill templates."""
+    s = jax.ShapeDtypeStruct
+    return {
+        "temperature": s((batch,), jnp.float32),
+        "top_k": s((batch,), jnp.int32),
+        "top_p": s((batch,), jnp.float32),
+        "key": s((batch, 2), jnp.uint32),
+    }
+
+
+def step_keys(samp: dict, pos: Array) -> Array:
+    """Per-row keys for the operation determining the token(s) at cache
+    position ``pos`` (B,): ``fold_in(base_key, pos)`` — the counter-based
+    stream that makes the continuation a pure function of
+    ``(seed, committed prefix)``."""
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32),
+                           samp["key"].shape[:1])
+    return jax.vmap(jax.random.fold_in)(samp["key"], pos)

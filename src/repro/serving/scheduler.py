@@ -40,10 +40,13 @@ would starve behind lower-priority runners — the lowest-priority running slot
 (latest ``(arrival_time, submission)``) is evicted: its pages return to the
 pool and its prompt + generated tokens are retained host-side. It is later
 re-admitted by **recompute-prefill** (prompt + generated-so-far becomes the
-new prefill), which with greedy verification is token-for-token lossless —
-greedy speculative output is a pure function of the prefix, so the resumed
-stream continues exactly where the evicted one stopped
-(tests/test_async_serving.py pins this per family). Re-admission of a
+new prefill), token-for-token losslessly for EVERY decoding policy: greedy
+speculative output is a pure function of the prefix, and a seeded sampled
+request's continuation is a pure function of ``(seed, prefix)`` — its
+per-step keys are ``fold_in(seed, position)`` counters, re-derived over the
+recomputed prefix (the resume prefill rebuilds the eviction's exact
+step-boundary state and commits nothing new; serving/sampling.py).
+tests/test_async_serving.py pins both, per family. Re-admission of a
 preempted request gates on its *full* remaining need so the same pressure
 cannot immediately re-evict it.
 
@@ -89,6 +92,7 @@ import numpy as np
 
 from repro.models import make_extras
 from repro.serving.engine import Engine
+from repro.serving.sampling import SamplingParams
 
 QUEUED = "queued"
 PREFILLING = "prefilling"
@@ -104,6 +108,14 @@ class Request:
     prefill commits the first generated token, which counts toward
     ``max_new_tokens`` (None = the engine's default budget).
 
+    ``sampling`` is the request's decoding policy (temperature / top-k /
+    top-p / seed / stop tokens — serving/sampling.SamplingParams); None
+    falls back to the engine default (``EngineConfig.sampling``, greedy
+    unless configured otherwise). A batch may freely mix greedy and sampled
+    requests: policy is a per-slot row of the device state, not an engine
+    mode. Budget precedence: ``max_new_tokens`` here, else
+    ``sampling.max_new_tokens``, else the engine default.
+
     ``arrival_time`` is in virtual time units — the scheduler will not admit
     the request before its arrival. ``extras`` carries per-request modality
     inputs (vision embeds / encoder embeds, leading batch axis 1, as built
@@ -114,6 +126,7 @@ class Request:
     max_new_tokens: Optional[int] = None
     arrival_time: float = 0.0
     extras: Optional[dict] = None
+    sampling: Optional[SamplingParams] = None
     rid: int = field(default_factory=lambda: next(_rid_counter))
     # lifecycle (managed by the scheduler)
     status: str = QUEUED
@@ -172,9 +185,13 @@ class Scheduler:
 
     ``preempt`` — evict the lowest-priority running slot when the page pool
     is exhausted (growth failure or queue-head starvation), resuming later by
-    recompute-prefill. Default: enabled iff verification is greedy (the
-    recompute resume is lossless only for greedy; pass ``preempt=False``
-    for sampled decoding, which then stalls instead of evicting).
+    recompute-prefill (default: enabled). The resume is token-for-token
+    lossless for every decoding policy: greedy continuation is a pure
+    function of the prefix, and seeded sampling re-derives its per-step keys
+    from ``fold_in(seed, position)`` over the recomputed prefix
+    (``Engine.prefill_into_slot(resume=True)`` restarts verification at the
+    exact step boundary the eviction stopped at). ``preempt=False`` stalls
+    slots on pool exhaustion instead.
     """
 
     def __init__(self, engine: Engine, eos_id: Optional[int] = None,
@@ -187,22 +204,15 @@ class Scheduler:
         self.sync_every = max(int(sync_every), 1)
         self.iter_cost = float(iter_cost)
         self.prefill_cost = float(prefill_cost)
-        if preempt is None:
-            preempt = engine.ecfg.greedy
-        elif preempt and not engine.ecfg.greedy:
-            raise ValueError(
-                "preemption resumes by recompute-prefill, which is lossless "
-                "only under greedy verification; pass preempt=False for "
-                "sampled decoding")
-        self.preempt = bool(preempt)
+        self.preempt = True if preempt is None else bool(preempt)
 
     # ------------------------------------------------------------------
-    def serve(self, requests: Sequence, rng: Optional[jax.Array] = None,
+    def serve(self, requests: Sequence,
               max_iters: int = 100_000) -> Dict[str, Any]:
         """Run every request to completion; returns aggregate + per-request
         metrics (wall-clock and virtual-time). ``requests`` entries may be
         Request objects or raw prompt arrays (coerced with the engine's
-        default budget, arrival 0)."""
+        default budget and sampling policy, arrival 0)."""
         eng = self.engine
         B = eng.batch
         default_budget = eng.ecfg.max_new_tokens
@@ -216,8 +226,12 @@ class Scheduler:
                     "single-use — submit a fresh one")
             r.t_submit = t_start
             r._seq = i
+            if r.sampling is None:
+                r.sampling = eng.ecfg.sampling
             if r.max_new_tokens is None:
-                r.max_new_tokens = default_budget
+                r.max_new_tokens = (r.sampling.max_new_tokens
+                                    if r.sampling.max_new_tokens is not None
+                                    else default_budget)
             # prompt + budget + worst-case speculative overshoot must fit the
             # cache, else the slot could never reach its budget
             need = (r.prompt.size + eng.pos_offset + r.max_new_tokens
@@ -243,7 +257,7 @@ class Scheduler:
         clock = 0.0
         events: List[Tuple[float, str, int]] = []
 
-        state = eng.blank_state(rng)
+        state = eng.blank_state()
         active = np.zeros((B,), bool)
         max_new = np.zeros((B,), np.int32)
         slot_req: List[Optional[Request]] = [None] * B
@@ -298,11 +312,17 @@ class Scheduler:
             return eng.can_admit(plen, rem, full=req.n_preempt > 0)
 
         def clip_and_check_done(req: Request) -> bool:
-            """Trim at EOS / budget; True when the request is complete."""
+            """Trim at the first stop token (scheduler ``eos_id`` or the
+            request's ``SamplingParams.stop_token_ids``) / budget; True when
+            the request is complete."""
             out = req.out_tokens
             done = False
-            if self.eos_id is not None and self.eos_id in out:
-                del out[out.index(self.eos_id) + 1:]
+            stops = set(req.sampling.stop_token_ids)
+            if self.eos_id is not None:
+                stops.add(self.eos_id)
+            idx = min((out.index(t) for t in stops if t in out), default=None)
+            if idx is not None:
+                del out[idx + 1:]
                 done = True
             if len(out) >= req.max_new_tokens:
                 del out[req.max_new_tokens:]     # speculative overshoot
@@ -312,11 +332,18 @@ class Scheduler:
         def admit(req: Request, s: int):
             nonlocal state, clock
             # recompute-prefill resume: the prefix is prompt + everything
-            # generated before eviction; greedy continuation from that
-            # prefix is exactly the uninterrupted stream
+            # generated before eviction. Greedy continuation from that
+            # prefix is exactly the uninterrupted stream (the prefill's
+            # argmax commit equals the verify path's token); a sampled
+            # request instead resumes via resume=True — the prefill rebuilds
+            # the eviction's step-boundary state and commits nothing new, so
+            # the next step restarts seeded verification at the same
+            # committed prefix — and fold_in key — the uninterrupted run's
+            # step boundary had
             prompt = (np.concatenate([req.prompt,
                                       np.asarray(req.out_tokens, np.int32)])
                       if req.out_tokens else req.prompt)
+            resume = bool(req.out_tokens) and not req.sampling.is_greedy
             remaining = req.max_new_tokens - len(req.out_tokens)
             req.status = PREFILLING
             req.slot = s
@@ -337,12 +364,16 @@ class Scheduler:
                 req.extras = extras
             events.append((clock, "admit", req.rid))
             state, first, last = eng.prefill_into_slot(
-                state, prompt, s, extras=extras, max_new=remaining)
+                state, prompt, s, extras=extras, sampling=req.sampling,
+                max_new=remaining, resume=resume)
             clock += self.prefill_cost
-            req.out_tokens.append(first)
-            req._committed += 1
-            req._prefills += 1
-            req._prev_new, req._prev_last = 1, last
+            if first is None:               # no-commit resume (sampled)
+                req._prev_new, req._prev_last = 0, last
+            else:
+                req.out_tokens.append(first)
+                req._committed += 1
+                req._prefills += 1
+                req._prev_new, req._prev_last = 1, last
             req.status = DECODING
             slot_req[s] = req
             active[s] = True
@@ -500,6 +531,50 @@ class Scheduler:
             "p99_wait_vt": float(np.percentile(wait_vt, 99)),
             "events": events,
         }
+
+
+class LLMEngine:
+    """vLLM-style front-end over Engine + Scheduler: offline batch
+    generation with per-prompt :class:`SamplingParams`.
+
+    Quickstart::
+
+        llm = LLMEngine(engine, eos_id=2)
+        outs = llm.generate(prompts, SamplingParams(temperature=0.8, seed=7))
+        outs[0]["tokens"]            # np.int32 generated ids, stop-trimmed
+
+    ``generate`` accepts one ``SamplingParams`` for every prompt or a list
+    with one entry per prompt (None entries fall back to the engine
+    default), so a single call — and a single batch — may mix greedy and
+    sampled requests. Outputs are returned in prompt order; the full
+    scheduler report of the last call (aggregate OTPS, latency percentiles,
+    event trace) is kept on ``last_report``.
+    """
+
+    def __init__(self, engine: Engine, eos_id: Optional[int] = None,
+                 **scheduler_kwargs):
+        self.engine = engine
+        self.scheduler = Scheduler(engine, eos_id=eos_id, **scheduler_kwargs)
+        self.last_report: Optional[Dict[str, Any]] = None
+
+    def generate(self, prompts: Sequence,
+                 sampling_params=None) -> List[Dict[str, Any]]:
+        """Generate a completion for every prompt; returns one result dict
+        per prompt (``tokens``, ``n_new``, ``acceptance_length``, ...) in
+        prompt order."""
+        n = len(prompts)
+        if sampling_params is None or isinstance(sampling_params,
+                                                 SamplingParams):
+            sampling_params = [sampling_params] * n
+        if len(sampling_params) != n:
+            raise ValueError(
+                f"{len(sampling_params)} sampling_params for {n} prompts")
+        reqs = [Request(p, sampling=sp)
+                for p, sp in zip(prompts, sampling_params)]
+        order = {r.rid: i for i, r in enumerate(reqs)}
+        self.last_report = self.scheduler.serve(reqs)
+        return sorted(self.last_report["results"],
+                      key=lambda res: order[res["rid"]])
 
 
 def serve_round_based(engine: Engine, prompts: Sequence,

@@ -195,7 +195,8 @@ def cache_specs(cache):
 #   everything else          — replicated. positions/block tables are tiny
 #       and index math; recurrent state (SSM "state", conv windows, RG-LRU
 #       "h") is O(B·d) bounded per slot and not worth a gather boundary;
-#       host bookkeeping (tokens, counters, rng) must stay cheap to read
+#       host bookkeeping (tokens, counters, per-slot sampling-policy rows
+#       incl. the per-request PRNG base keys) must stay cheap to read
 #       back every scheduler sync.
 #   BlockAllocator free lists — host-side Python, never on device at all.
 

@@ -17,8 +17,11 @@ budget frees — and pin four invariants:
   waiting earlier request;
 - **lossless preemption**: every request's token stream equals an
   uninterrupted solo run on the same engine, token for token — for dense,
-  SSM, and hybrid targets (greedy recompute resume is a pure function of
-  the prefix).
+  SSM, and hybrid targets, under BOTH decoding policies: greedy recompute
+  resume is a pure function of the prefix, and seeded sampling replays
+  bitwise because its per-step keys are fold_in(seed, position) counters
+  re-derived over the recomputed prefix (the seeded-sampling replay
+  invariant, docs/serving.md).
 
 The virtual clock is step-cost-driven, so every scenario here replays
 bit-identically across runs (test_virtual_clock_deterministic pins that
@@ -34,7 +37,8 @@ from hypothesis import given, settings, strategies as st
 from repro.configs import DrafterConfig, get_config
 from repro.core import drafter as D
 from repro.models import get_model
-from repro.serving import Engine, EngineConfig, Request, Scheduler
+from repro.serving import (Engine, EngineConfig, Request, SamplingParams,
+                           Scheduler)
 from repro.sharding.utils import serving_mesh
 
 KEY = jax.random.PRNGKey(17)
@@ -189,14 +193,56 @@ def test_stall_without_preemption_still_lossless():
     assert_pool_drained(eng)
 
 
-def test_preempt_requires_greedy():
-    tcfg, dcfg, tparams, dparams = _setup("dense")
-    eng = Engine(tcfg, dcfg, tparams, dparams,
-                 EngineConfig(K=2, max_new_tokens=8, greedy=False,
-                              drafter_mode="parallel", max_len=64), 2)
-    with pytest.raises(ValueError, match="greedy"):
-        Scheduler(eng, preempt=True)
-    assert Scheduler(eng).preempt is False        # auto-disabled, no raise
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_sampled_preempted_stream_equals_uninterrupted(family):
+    """Seeded-sampling replay invariant through the full churn cycle: a
+    preempted-and-resumed SAMPLED request (temperature > 0, per-request
+    seed) emits bitwise the token sequence of an uninterrupted run — the
+    resume prefill rebuilds the eviction's step-boundary state and the
+    per-step fold_in(seed, position) keys re-derive identically over the
+    recomputed prefix. Pre-redesign this workload raised ValueError
+    (preemption was greedy-only); now it must just work, per family."""
+    eng = get_engine(family, pool_pages=5)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, 200, size=6).astype(np.int32)
+               for _ in range(3)]
+    budgets = [14, 14, 8]
+    sps = [SamplingParams(temperature=0.8, seed=100 + i) for i in range(3)]
+    rep = Scheduler(eng).serve(
+        [Request(p, max_new_tokens=b, sampling=sp)
+         for p, b, sp in zip(prompts, budgets, sps)])
+    assert rep["preemptions"] >= 1, "workload was meant to force eviction"
+    for res, p, b, sp in zip(rep["results"], prompts, budgets, sps):
+        solo = Scheduler(eng).serve(
+            [Request(p, max_new_tokens=b, sampling=sp)])
+        np.testing.assert_array_equal(
+            res["tokens"], solo["results"][0]["tokens"],
+            err_msg=f"{family}: sampled rid {res['rid']} diverged "
+                    "after preemption")
+    assert_pool_drained(eng)
+
+
+def test_mixed_policy_churn_preempt_lossless():
+    """A batch mixing greedy and seeded sampled requests through a tight
+    pool: evictions and resumes leave EVERY stream — both policies — equal
+    to its uninterrupted solo run, and the pool drains."""
+    eng = get_engine("dense", pool_pages=5)
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(1, 200, size=6).astype(np.int32)
+               for _ in range(4)]
+    budgets = [12, 14, 8, 6]
+    sps = [SamplingParams.greedy(), SamplingParams(temperature=0.9, seed=4),
+           SamplingParams(temperature=0.6, top_p=0.9, seed=5), None]
+    rep = Scheduler(eng).serve(
+        [Request(p, max_new_tokens=b, sampling=sp)
+         for p, b, sp in zip(prompts, budgets, sps)])
+    for res, p, b, sp in zip(rep["results"], prompts, budgets, sps):
+        solo = Scheduler(eng).serve(
+            [Request(p, max_new_tokens=b, sampling=sp)])
+        np.testing.assert_array_equal(
+            res["tokens"], solo["results"][0]["tokens"],
+            err_msg=f"mixed churn: rid {res['rid']} diverged")
+    assert_pool_drained(eng)
 
 
 # ---------------------------------------------------------------------------
