@@ -24,7 +24,8 @@ def main() -> None:
                             table5_embedding, table6_depth, table7_epochs,
                             table8_seqlen, table9_acceptance, table10_otps,
                             table11_continuous, table12_paged, table13_async,
-                            table14_sharded, table15_sampling, roofline)
+                            table14_sharded, table15_sampling,
+                            table16_prefix, roofline)
 
     epochs = 12 if args.quick else 22
     jobs = {
@@ -43,6 +44,7 @@ def main() -> None:
         "13": lambda: table13_async.run(epochs=epochs),
         "14": lambda: table14_sharded.run(epochs=epochs),
         "15": lambda: table15_sampling.run(epochs=epochs),
+        "16": lambda: table16_prefix.run(epochs=epochs),
         "roofline": lambda: roofline.run(),
     }
     wanted = list(jobs) if args.tables == "all" else [

@@ -71,8 +71,12 @@ def run(epochs=15, n_requests=24, max_new=24, mean_gap=0.5):
                                   ("incremental", "incremental", True)]:
         eng = make(growth)
         rep = None
-        for _ in range(2):                       # warm second run
+        for it in range(2):                      # warm first, measure second
             rep = Scheduler(eng, preempt=preempt).serve(reqs())
+            if it == 0:
+                # peak_pages must reflect the measured pass only, not the
+                # max across both phases (BlockAllocator.reset_stats)
+                eng.allocator.reset_stats()
         byt = kv_bytes(eng)
         peak = peak_resident(rep["events"])
         per_mib = peak / (byt / 2**20)

@@ -1,4 +1,5 @@
 from repro.serving.engine import Engine, EngineConfig
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import (LLMEngine, Request, Scheduler,
                                      serve_round_based)
@@ -6,5 +7,5 @@ from repro.serving import cache_ops
 from repro.serving.cache_ops import BlockAllocator
 
 __all__ = ["BlockAllocator", "Engine", "EngineConfig", "LLMEngine",
-           "Request", "SamplingParams", "Scheduler", "serve_round_based",
-           "cache_ops"]
+           "PrefixCache", "Request", "SamplingParams", "Scheduler",
+           "serve_round_based", "cache_ops"]

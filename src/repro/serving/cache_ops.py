@@ -43,7 +43,7 @@ recurrent snapshot commit work bit-identically across layouts.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -154,20 +154,25 @@ def reset_slot(tree, slot: Array, axes, fills: Optional[dict] = None):
 # ---------------------------------------------------------------------------
 
 class BlockAllocator:
-    """Host-side free-list allocator over a fixed pool of KV pages.
+    """Host-side refcounted free-list allocator over a fixed pool of KV
+    pages.
 
-    ``alloc(n)`` pops n page ids (returns None — allocating nothing — when
-    the pool can't satisfy the request, so admission can simply wait);
-    ``free(pages)`` returns them. Double-free and foreign ids raise: leaked
-    or aliased pages corrupt neighbouring requests silently, so the
-    allocator is the loud line of defense."""
+    ``alloc(n)`` pops n page ids at refcount 1 (returns None — allocating
+    nothing — when the pool can't satisfy the request, so admission can
+    simply wait); ``free(pages)`` drops one reference per page and returns
+    a page to the free list only when its count reaches zero. ``incref``
+    adds owners — the prefix cache shares one physical page between its
+    index and every slot whose block table maps it, so a page may outlive
+    the request that prefilled it. Double-free (decref past zero) and
+    foreign ids raise: leaked or aliased pages corrupt neighbouring
+    requests silently, so the allocator is the loud line of defense."""
 
     def __init__(self, n_pages: int):
         if n_pages <= 0:
             raise ValueError(f"need a positive pool, got {n_pages}")
         self.n_pages = n_pages
         self._free: List[int] = list(range(n_pages - 1, -1, -1))
-        self._used: set = set()
+        self._ref: Dict[int, int] = {}   # page id -> reference count (>= 1)
         self.peak_used = 0     # high-water mark (honest residency metrics)
 
     @property
@@ -176,33 +181,69 @@ class BlockAllocator:
 
     @property
     def n_used(self) -> int:
-        return len(self._used)
+        return len(self._ref)
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop ``n`` page ids off the free list (LIFO — freshly freed pages
-        are reused first, which keeps the working set compact).
+        """Pop ``n`` page ids off the free list at refcount 1 (LIFO —
+        freshly freed pages are reused first, which keeps the working set
+        compact).
 
         Returns the page ids, or None — allocating *nothing* — when fewer
         than ``n`` pages are free, so a caller can atomically wait/preempt
-        instead of holding a partial claim. Raises on negative ``n``."""
+        instead of holding a partial claim. Raises on negative ``n``.
+
+        A recycled page may carry the previous owner's stale bytes: every
+        acquisition path must blank or fully overwrite it (admission
+        scatters cover admission; ``Engine.ensure_capacity`` blanks growth
+        pages explicitly — blanking at free time is impossible now that
+        cached pages survive their request)."""
         if n < 0:
             raise ValueError(f"alloc({n})")
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
-        self._used.update(pages)
-        self.peak_used = max(self.peak_used, len(self._used))
+        for p in pages:
+            self._ref[p] = 1
+        self.peak_used = max(self.peak_used, len(self._ref))
         return pages
 
-    def free(self, pages: List[int]) -> None:
-        """Return ``pages`` to the pool. Raises on a page that is not
-        currently allocated (double-free or foreign id) — silent aliasing
-        would corrupt a neighbouring request's KV."""
+    def incref(self, pages: List[int]) -> None:
+        """Add one owner to each page (block-table sharing / CoW-source
+        pinning / prefix-cache insertion). Raises on a page that is not
+        currently allocated — sharing a free page would alias whatever the
+        free list hands out next."""
         for p in pages:
-            if p not in self._used:
+            if p not in self._ref:
+                raise ValueError(f"incref of page {p} not currently allocated")
+        for p in pages:
+            self._ref[p] += 1
+
+    def refcount(self, page: int) -> int:
+        """Current owner count of ``page`` (0 when free)."""
+        return self._ref.get(page, 0)
+
+    def free(self, pages: List[int]) -> None:
+        """Drop one reference per page; a page returns to the pool only at
+        refcount zero (shared pages survive until their last owner lets
+        go). Raises on a page that is not currently allocated (double-free
+        past zero, or a foreign id) — silent aliasing would corrupt a
+        neighbouring request's KV."""
+        for p in pages:
+            if p not in self._ref:
                 raise ValueError(f"free of page {p} not currently allocated")
-            self._used.remove(p)
-            self._free.append(p)
+        for p in pages:
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                self._free.append(p)
+
+    def reset_stats(self) -> None:
+        """Restart the ``peak_used`` high-water mark at the CURRENT
+        residency. Multi-phase benchmark runs (table12/13/16 compare
+        disciplines or warm-up vs measured passes in one process) call this
+        between phases so each phase reports its own honest peak instead of
+        the max across every phase so far."""
+        self.peak_used = self.n_used
 
 
 def _is_paged_dict(d: dict, max_len: int) -> bool:
@@ -335,12 +376,15 @@ def scatter_state(pstate, view_state, table: Array, spec):
 
 def blank_pages(pstate, table_row: Array, spec):
     """Mark every position slot of the pages in ``table_row`` (nb,) empty
-    (-1). Freed pages MUST read as empty when recycled: incremental growth
-    (``Engine.ensure_capacity``) splices a pool page into another slot's
-    table without the full-row overwrite an admission does, so a stale
-    positions entry would resurrect the previous owner's KV as attendable
-    history. K/V bytes are left in place — empty positions mask them on
-    every attention path. Unallocated entries (-1) are dropped."""
+    (-1). A recycled page MUST read as empty at ACQUISITION time:
+    incremental growth (``Engine.ensure_capacity``) splices a pool page
+    into another slot's table without the full-row overwrite an admission
+    does, so a stale positions entry would resurrect the previous owner's
+    KV as attendable history. Blanking runs on alloc, not free — a freed
+    page may still be mapped by the prefix cache or a sharing slot, and
+    blanking it at free time would corrupt the surviving owners' history.
+    K/V bytes are left in place — empty positions mask them on every
+    attention path. Unallocated entries (-1) are dropped."""
     def blank(pool, tag):
         if tag != PAGED_POS:
             return pool
@@ -351,18 +395,44 @@ def blank_pages(pstate, table_row: Array, spec):
     return jax.tree.map(blank, pstate, spec)
 
 
-def admit_pages(pstate, src, slot: Array, table_row: Array, axes, spec):
+def copy_page(pstate, src: Array, dst: Array, spec):
+    """Copy one pool page — K/V bytes and positions alike — from page id
+    ``src`` to page id ``dst`` across every paged leaf. This is the
+    copy-on-write step of prefix caching: a cached page whose token chain
+    matches but whose content a new request must amend (the divergent last
+    drafter entry) is duplicated into a freshly allocated page the slot
+    owns, leaving the shared original byte-stable for its other owners.
+    ``src``/``dst`` may be traced scalars, so one trace serves every page
+    pair."""
+    def cp(pool, tag):
+        if tag == NOT_PAGED:
+            return pool
+        ax = pool.ndim + _page_axis(tag)
+        page = jax.lax.dynamic_index_in_dim(pool, src, axis=ax, keepdims=True)
+        return jax.lax.dynamic_update_slice_in_dim(pool, page, dst, axis=ax)
+    return jax.tree.map(cp, pstate, spec)
+
+
+def admit_pages(pstate, src, slot: Array, table_row: Array, axes, spec,
+                scatter_row: Optional[Array] = None):
     """Admit a batch-1 contiguous state ``src`` into a paged state: per-slot
     leaves go through ``write_slot`` (pool leaves have no batch axis in the
     paged layout, so the inferred ``axes`` skip them automatically), paged
-    leaves scatter src row 0 into the pages of ``table_row`` (nb,)."""
+    leaves scatter src row 0 into the pages of ``table_row`` (nb,).
+
+    ``scatter_row`` (default: ``table_row``) selects which of the row's
+    pages actually receive the src view — a prefix-cache hit masks the
+    shared prefix pages to -1 (dropped by ``scatter_pages``) so admission
+    writes only the freshly prefilled suffix pages and never touches pages
+    other slots (or the cache index) still map."""
     out = write_slot(pstate, src, slot, axes)
+    sr = table_row if scatter_row is None else scatter_row
 
     def admit(pool, s, tag):
         if tag == NOT_PAGED:
             return pool
         return scatter_pages(pool, jax.lax.index_in_dim(
             s, 0, axis=s.ndim + _page_axis(tag), keepdims=True),
-            table_row[None], tag)
+            sr[None], tag)
 
     return jax.tree.map(admit, out, src, spec)

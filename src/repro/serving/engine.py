@@ -49,6 +49,7 @@ from repro.core import drafter as D
 from repro.core import spec_decode as SD
 from repro.models import get_model
 from repro.serving import cache_ops
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import (SamplingParams, batch_sampling_state,
                                     blank_sampling_state, sampling_state_sds,
                                     step_keys)
@@ -104,6 +105,18 @@ class EngineConfig:
     # for the request's whole lifetime (the static-admission baseline
     # benchmarks/table13_async.py compares against).
     kv_growth: str = "incremental"
+    # Cross-request prefix caching (serving/prefix_cache.py): pages of
+    # committed prompt/generation streams stay indexed by token-prefix
+    # chain after their request finishes (or is preempted), and admission
+    # of a request whose prompt walks a cached chain maps those pages into
+    # its block-table row — prefilling only the uncached suffix — instead
+    # of recomputing them. Paged-only. Dense attention targets take the
+    # fast path; recurrent families (ssm/hybrid) carry per-slot state no
+    # page holds, so they serve unchanged with the cache structurally
+    # idle. A hit is token-for-token lossless vs a cold prefill
+    # (tests/test_prefix_cache.py), and cached pages are reclaimed LRU
+    # under pool pressure (pages live slots map are pinned).
+    prefix_cache: bool = False
     # Power-of-two bucketing for per-slot admission prefills, so a stream of
     # distinct prompt lengths compiles O(log2 max_len) traces instead of one
     # per length. Append-only attention families right-pad to the bucket
@@ -219,6 +232,19 @@ class Engine:
             self.pool_pages = ecfg.pool_pages or batch * self.pages_per_slot
             self.allocator = cache_ops.BlockAllocator(self.pool_pages)
             self._slot_pages: List[List[int]] = [[] for _ in range(batch)]
+        if ecfg.prefix_cache and not self.paged:
+            raise ValueError(
+                "prefix_cache requires kv_layout='paged' (pages are the "
+                "sharing unit)")
+        self.prefix_cache = (PrefixCache(ecfg.page_size)
+                             if self.paged and ecfg.prefix_cache else None)
+        # the previous serving session's final state — cached page content
+        # lives in its pool arrays, so serve_state() resumes from it
+        self._serve_state: Optional[dict] = None
+        # tokens the most recent prefill_into_slot served from cached pages
+        # (0 on a cold admission) — the scheduler reads this right after the
+        # call to account per-request hit stats
+        self.last_hit_tokens = 0
         # host-side mirror of each slot's policy (sampled vs greedy) — set
         # at admission, cleared on free; lets step() pick the greedy-only
         # trace when nothing in the batch samples (purely a perf choice)
@@ -283,6 +309,13 @@ class Engine:
             self._paged_admit = jax.jit(self._paged_admit_impl)
             self._free = jax.jit(self._free_impl)
             self._paged_free = jax.jit(self._paged_free_impl)
+            # prefix-cache hit path (invoked only with ecfg.prefix_cache):
+            # page ids / start positions are traced, so each entry point
+            # costs one trace (plus one per pow2 suffix chunk width)
+            self._blank_row = jax.jit(self._blank_row_impl)
+            self._copy_page = jax.jit(self._copy_page_impl)
+            self._hit_seed = jax.jit(self._hit_seed_impl)
+            self._hit_chunk = jax.jit(self._hit_chunk_impl)
             # one trace for every (slot, page-count) combination: slot and
             # the full-width block-table row are both traced, so decode-time
             # growth never recompiles (pinned by tests/test_cache_ops.py)
@@ -324,10 +357,26 @@ class Engine:
                 self._paged_step_impl, in_shardings=(tp, dp, psh, rp, rp),
                 out_shardings=psh)
             self._paged_admit = jj(self._paged_admit_impl,
-                                   in_shardings=(psh, csh, rp, rp, rp, rp),
+                                   in_shardings=(psh, csh, rp, rp, rp, rp,
+                                                 rp),
                                    out_shardings=psh)
             self._paged_free = jj(self._paged_free_impl,
                                   in_shardings=(psh, rp), out_shardings=psh)
+            # prefix-cache hit path: pool-to-pool data movement stays
+            # sharded (blank/copy); the seeded batch-1 view comes out in
+            # the contiguous state sharding and chunk prefills cross the
+            # usual replication boundary inside _hit_chunk_impl
+            self._blank_row = jj(self._blank_row_impl,
+                                 in_shardings=(psh, rp), out_shardings=psh)
+            self._copy_page = jj(self._copy_page_impl,
+                                 in_shardings=(psh, rp, rp),
+                                 out_shardings=psh)
+            self._hit_seed = jj(self._hit_seed_impl,
+                                in_shardings=(psh, rp, rp, rp, rp),
+                                out_shardings=csh)
+            self._hit_chunk = jj(self._hit_chunk_impl,
+                                 in_shardings=(tp, dp, csh, rp, rp),
+                                 out_shardings=csh)
         self._set_table_row = jj(lambda bt, slot, row: bt.at[slot].set(row),
                                  in_shardings=(rp, rp, rp), out_shardings=rp)
 
@@ -661,6 +710,26 @@ class Engine:
                                    if self.paged else self.state_shardings)
         return state
 
+    def serve_state(self) -> dict:
+        """Decode state to START a serving session with. Cache-off engines
+        always start blank; a prefix-cache engine resumes from the previous
+        session's retained state — cached page CONTENT lives in the state's
+        pool arrays (the host-side index only maps page ids), so starting
+        from a fresh blank pool would orphan every index entry onto zeroed
+        pages. The retained state has every slot freed (block-table rows
+        -1, counters inert); only held pages carry meaningful bytes."""
+        if self.prefix_cache is None or self._serve_state is None:
+            return self.blank_state()
+        return self._serve_state
+
+    def retain_state(self, state: dict) -> None:
+        """Hand a serving session's final state back for cross-session page
+        reuse (no-op without a prefix cache). Scheduler.serve calls this
+        after draining; between sessions the engine keeps exactly one state
+        alive, so pool memory is not duplicated."""
+        if self.prefix_cache is not None:
+            self._serve_state = state
+
     @property
     def commit_stride(self) -> int:
         """Max positions one speculative iteration writes into the cache
@@ -700,18 +769,34 @@ class Engine:
                               + self.commit_stride)
 
     def can_admit(self, prompt_len: int, max_new: Optional[int] = None,
-                  full: bool = False) -> bool:
+                  full: bool = False, tokens=None) -> bool:
         """Whether the pool can admit one more request of this shape right
         now (always True for the contiguous layout — a free slot is a free
         max_len row). ``full`` gates on the whole-lifetime need even under
         incremental growth — the scheduler uses it when re-admitting a
         preempted request, so a resumed victim cannot be immediately
-        re-evicted by the same pressure that evicted it."""
+        re-evicted by the same pressure that evicted it.
+
+        With a prefix cache, cache-only pages count as reclaimable (they
+        are evicted LRU on allocation pressure, so a full pool of cold
+        cache entries never wedges admission), and passing the prompt
+        ``tokens`` gates on the EFFECTIVE post-hit need: pages the prompt
+        will map from the cache don't have to come off the free list."""
         if not self.paged:
             return True
         need = (self.pages_needed(prompt_len, max_new) if full
                 else self.initial_pages(prompt_len, max_new))
-        return need <= self.allocator.n_free
+        avail = self.allocator.n_free
+        if self.prefix_cache is not None:
+            pinned = ()
+            if tokens is not None and self._hits_ok():
+                shared, cow = self.prefix_cache.probe(tokens)
+                need -= len(shared)
+                # the hit itself pins its shared pages (and CoW source), so
+                # they can't double as eviction headroom for the fresh ones
+                pinned = shared + ([cow] if cow is not None else [])
+            avail += self.prefix_cache.evictable(self.allocator, pinned)
+        return need <= avail
 
     def slot_capacity(self, slot: int) -> int:
         """Cache positions the slot's current page allocation covers."""
@@ -734,10 +819,17 @@ class Engine:
         have = len(self._slot_pages[slot])
         if need <= have:
             return state, True
-        got = self.allocator.alloc(need - have)
+        got = self._alloc_pages(need - have)
         if got is None:
             return state, False
         self._slot_pages[slot].extend(got)
+        # blank-on-alloc: a recycled page may carry the previous owner's
+        # stale positions, and growth splices it into the table without
+        # the full overwrite an admission scatter does — blank BEFORE the
+        # table maps it, so it can never read as attendable history
+        grow = np.full((self.pages_per_slot,), -1, np.int32)
+        grow[:len(got)] = got
+        state = self._blank_row(state, jnp.asarray(grow))
         row = np.full((self.pages_per_slot,), -1, np.int32)
         row[:len(self._slot_pages[slot])] = self._slot_pages[slot]
         state = dict(state)
@@ -766,6 +858,15 @@ class Engine:
         claim covers only prompt + one speculative block, and the scheduler
         calls ``ensure_capacity`` before each step as the slot grows.
 
+        With ``EngineConfig(prefix_cache=True)`` (dense targets), the
+        prompt is first matched against the engine's
+        :class:`~repro.serving.prefix_cache.PrefixCache`: cached pages are
+        mapped (refcount-shared) into the slot's block-table row, a
+        divergent partial page is copied-on-write, and only the uncached
+        suffix is prefilled — token-for-token identical to the cold path.
+        ``Engine.last_hit_tokens`` reports how many positions the admission
+        served from cache (0 when cold).
+
         ``resume=False`` (fresh admission): the prefill commits one token —
         greedy rows by argmax, sampled rows by a seeded draw from the warped
         target distribution — and returns ``(new_state, first_token,
@@ -792,9 +893,10 @@ class Engine:
         sp = sampling or self.ecfg.sampling
         self._slot_sampled[slot] = not sp.is_greedy
         samp = batch_sampling_state(sp, 1)
-        src = self._admission_prefill(prompt, extras or {}, samp)
         res = jnp.asarray(1 if resume else 0, jnp.int32)
+        self.last_hit_tokens = 0
         if not self.paged:
+            src = self._admission_prefill(prompt, extras or {}, samp)
             state = self._admit(state, src, jnp.asarray(slot, jnp.int32),
                                 res, res_tok)
         else:
@@ -803,17 +905,33 @@ class Engine:
                                    "free_slot it before re-admission")
             n = self.initial_pages(int(prompt.shape[1]) + (1 if resume
                                                            else 0), max_new)
-            pages = self.allocator.alloc(n)
-            if pages is None:
-                raise RuntimeError(
-                    f"page pool exhausted ({n} needed, "
-                    f"{self.allocator.n_free} free); gate on can_admit")
-            self._slot_pages[slot] = pages
-            row = np.full((self.pages_per_slot,), -1, np.int32)
-            row[:n] = pages
-            state = self._paged_admit(state, src,
-                                      jnp.asarray(slot, jnp.int32),
-                                      jnp.asarray(row), res, res_tok)
+            hit = None
+            if self._hits_ok(extras):
+                shared, cow = self.prefix_cache.match(np.asarray(prompt[0]))
+                if shared or cow is not None:
+                    hit = (shared, cow)
+            if hit is not None:
+                state, src = self._hit_admission(state, prompt, slot, n,
+                                                 hit[0], hit[1], samp, res,
+                                                 res_tok)
+            else:
+                pages = self._alloc_pages(n)
+                if pages is None:
+                    raise RuntimeError(
+                        f"page pool exhausted ({n} needed, "
+                        f"{self.allocator.n_free} free); gate on can_admit")
+                self._slot_pages[slot] = pages
+                row = np.full((self.pages_per_slot,), -1, np.int32)
+                row[:n] = pages
+                src = self._admission_prefill(prompt, extras or {}, samp)
+                state = self._paged_admit(state, src,
+                                          jnp.asarray(slot, jnp.int32),
+                                          jnp.asarray(row), jnp.asarray(row),
+                                          res, res_tok)
+                if self._hits_ok(extras):
+                    self.prefix_cache.insert_stream(np.asarray(prompt[0]),
+                                                    pages, self.allocator)
+                    self.prefix_cache.note_admission(0, False)
         last = int(src["last"][0])
         if resume:
             return state, None, last
@@ -841,23 +959,217 @@ class Engine:
             dst, self._resume_fixup(src, resume, res_tok), slot,
             self.slot_axes)
 
-    def _paged_admit_impl(self, dst, src, slot, row, resume, res_tok):
+    def _paged_admit_impl(self, dst, src, slot, row, scatter_row, resume,
+                          res_tok):
+        """``row`` is the slot's full block-table mapping; ``scatter_row``
+        selects which of those pages receive the prefilled view (equal on a
+        cold admission; a prefix-cache hit masks its shared prefix pages to
+        -1 so only freshly owned suffix/CoW pages are written — shared
+        pages already hold exactly the bytes the view carries for them)."""
         core = {k: v for k, v in dst.items() if k != "block_table"}
         core = cache_ops.admit_pages(
             core, self._resume_fixup(src, resume, res_tok), slot, row,
-            self.paged_axes, self.pspec)
+            self.paged_axes, self.pspec, scatter_row=scatter_row)
         core["block_table"] = dst["block_table"].at[slot].set(row)
         return core
 
-    def free_slot(self, state: dict, slot: int) -> dict:
+    # ------------------------------------------------------------------
+    # prefix caching (serving/prefix_cache.py; EngineConfig.prefix_cache)
+    # ------------------------------------------------------------------
+    def _hits_ok(self, extras: Optional[dict] = None) -> bool:
+        """Whether prefix-cache sharing applies to this admission. Pages
+        hold the full per-position state only for dense attention targets:
+        recurrent families (ssm/hybrid) carry per-slot state outside the
+        pools, vlm/encdec condition on per-request extras / position
+        offsets, and moe couples batch rows — all of those serve unchanged
+        with the cache structurally idle (no matches, no inserts)."""
+        return (self.prefix_cache is not None
+                and self.tcfg.family == "dense"
+                and not extras
+                and self.pos_offset == 0)
+
+    def _alloc_pages(self, n: int) -> Optional[List[int]]:
+        """``allocator.alloc`` with prefix-cache pressure relief: on
+        exhaustion, evict least-recently-used cache-only pages (pinned
+        pages — refcount > 1 — are skipped) and retry once."""
+        got = self.allocator.alloc(n)
+        if got is None and self.prefix_cache is not None:
+            self.prefix_cache.evict(n - self.allocator.n_free,
+                                    self.allocator)
+            got = self.allocator.alloc(n)
+        return got
+
+    def _blank_row_impl(self, state, row):
+        core = {k: v for k, v in state.items() if k != "block_table"}
+        core = cache_ops.blank_pages(core, row, self.pspec)
+        core["block_table"] = state["block_table"]
+        return core
+
+    def _copy_page_impl(self, state, src_page, dst_page):
+        core = {k: v for k, v in state.items() if k != "block_table"}
+        core = cache_ops.copy_page(core, src_page, dst_page, self.pspec)
+        core["block_table"] = state["block_table"]
+        return core
+
+    def _hit_seed_impl(self, state, row, tokens_row, start, samp):
+        """Seed the batch-1 contiguous state of a prefix-cache hit: gather
+        the slot's mapped row (shared prefix pages + CoW copy + fresh
+        suffix pages) into the per-slot view and blank every view index >=
+        ``start`` — fresh pages may carry a previous owner's stale
+        positions, and the CoW page's final drafter entry belongs to a
+        different lookahead token. Indices below ``start`` are cached
+        content, valid by the full-key invariant (prefix_cache.py). The
+        suffix chunks (``_hit_chunk`` then ``_chunk``) then recompute
+        positions ``start..P-1`` exactly as a cold prefill would."""
+        src = make_decode_state(self.model, self.tcfg, self.dcfg, self.ecfg,
+                                1, sampling=samp)
+        table = row[None]
+        idx = jnp.arange(self.ecfg.max_len, dtype=jnp.int32)
+
+        def seed(blank, pooled, tag):
+            if tag == cache_ops.NOT_PAGED:
+                return blank
+            view = cache_ops.gather_pages(pooled, table, tag)
+            if tag == cache_ops.PAGED_POS:
+                view = jnp.where(idx >= start, -1, view)
+            return view
+
+        keys = (("tcache", "dcache") if self.ecfg.drafter_mode != "none"
+                else ("tcache",))
+        for key in keys:
+            src[key] = jax.tree.map(seed, src[key], state[key],
+                                    self.pspec[key])
+        src["tokens"] = tokens_row
+        src["last"] = jnp.full((1,), start, jnp.int32)
+        return src
+
+    def _hit_chunk_impl(self, tparams, dparams, state, chunk, start):
+        """First suffix chunk of a prefix-cache hit: identical to
+        ``_chunk_impl`` except the drafter pair at position ``start - 1``
+        is SKIPPED — it pairs the cached tap at start-1 with the chunk's
+        first token, and the full-key scheme guarantees the cached page
+        already committed exactly that entry (the lookahead token is part
+        of the page's identity), while the tap itself was never recomputed
+        here. Later chunks have taps_last and take ``_chunk``."""
+        tparams, dparams = self._rep(tparams), self._rep(dparams)
+        state = self._rep(state)
+        B, c = chunk.shape
+        off = self.pos_offset
+        positions = jnp.broadcast_to(
+            (start + off + jnp.arange(c, dtype=jnp.int32))[None], (B, c))
+        out = self.model.forward(tparams, chunk, mode="decode",
+                                 positions=positions, cache=state["tcache"],
+                                 collect_taps=True, head_last_only=True)
+        fused = start + off + c
+        samp = state["sampling"]
+        first = SD.sample_token(step_keys(samp, fused), out.logits[:, -1],
+                                samp["temperature"], samp["top_k"],
+                                samp["top_p"])
+        tokens = jax.lax.dynamic_update_slice(state["tokens"], chunk,
+                                              (0, start + off))
+        tokens = tokens.at[jnp.arange(B), fused].set(first)
+        new = dict(state)
+        new.update(
+            tokens=tokens,
+            last=jnp.broadcast_to(fused, (B,)).astype(jnp.int32),
+            taps_last=out.taps[:, -1],
+            tcache=out.cache,
+        )
+        if self.ecfg.drafter_mode != "none" and c > 1:
+            dpos = jnp.broadcast_to(
+                (start + off + jnp.arange(c - 1, dtype=jnp.int32))[None],
+                (B, c - 1))
+            new["dcache"] = D.extend(self.dcfg, self.tcfg, dparams,
+                                     state["dcache"], chunk[:, 1:],
+                                     out.taps[:, :-1], dpos)
+        return self._rep(new)
+
+    def _hit_admission(self, state, prompt, slot, n, shared, cow, samp,
+                       res, res_tok):
+        """Admission fast path when ``prompt`` matched cached pages: map
+        the shared pages into the slot's block-table row (incref — the
+        cache and the slot now co-own them), copy-on-write the divergent
+        partial page if any, and prefill only the uncached suffix through
+        decode-mode chunks. Reference-order matters: matched pages and the
+        CoW source are pinned BEFORE the fresh allocation so the eviction
+        that allocation may trigger can never reclaim them."""
+        ps = self.ecfg.page_size
+        self.allocator.incref(shared)
+        if cow is not None:
+            self.allocator.incref([cow])
+        fresh = self._alloc_pages(n - len(shared))
+        if fresh is None:
+            self.allocator.free(shared)
+            if cow is not None:
+                self.allocator.free([cow])
+            raise RuntimeError(
+                f"page pool exhausted ({n - len(shared)} needed, "
+                f"{self.allocator.n_free} free); gate on can_admit")
+        start = len(shared) * ps
+        if cow is not None:
+            # fresh[0] becomes the slot-owned copy; everything in it is
+            # valid except the final drafter entry, so the suffix restarts
+            # one position early to recompute it
+            state = self._copy_page(state, jnp.asarray(cow, jnp.int32),
+                                    jnp.asarray(fresh[0], jnp.int32))
+            self.allocator.free([cow])          # unpin the source
+            start += ps - 1
+        row_pages = shared + fresh
+        self._slot_pages[slot] = row_pages
+        row = np.full((self.pages_per_slot,), -1, np.int32)
+        row[:len(row_pages)] = row_pages
+        scat = row.copy()
+        scat[:len(shared)] = -1     # never write pages other owners hold
+        ptoks = np.asarray(prompt[0])
+        tokens_row = np.zeros((1, self.ecfg.max_len), np.int32)
+        tokens_row[0, :ptoks.size] = ptoks
+        src = self._hit_seed(state, jnp.asarray(row), jnp.asarray(tokens_row),
+                             jnp.asarray(start, jnp.int32), samp)
+        sizes = self.prefill_buckets(int(prompt.shape[1]) - start)
+        src = self._hit_chunk(self.tparams, self.dparams, src,
+                              prompt[:, start:start + sizes[0]],
+                              jnp.asarray(start, jnp.int32))
+        pos = start + sizes[0]
+        for c in sizes[1:]:
+            src = self._chunk(self.tparams, self.dparams, src,
+                              prompt[:, pos:pos + c],
+                              jnp.asarray(pos, jnp.int32))
+            pos += c
+        state = self._paged_admit(state, src, jnp.asarray(slot, jnp.int32),
+                                  jnp.asarray(row), jnp.asarray(scat), res,
+                                  res_tok)
+        # insert-on-admit: the verifiable prompt prefix — including a
+        # diverged CoW page, whose full key now carries THIS lookahead
+        self.prefix_cache.insert_stream(ptoks, row_pages, self.allocator)
+        self.last_hit_tokens = start
+        self.prefix_cache.note_admission(start, cow is not None)
+        return state, src
+
+    def free_slot(self, state: dict, slot: int,
+                  final_tokens=None) -> dict:
         """Reset one slot's per-slot rows to blank (positions -1) and
         refreeze it (new_count = max_new_tokens) so it idles until the next
-        admission. In the paged layout this also returns the slot's pages to
-        the pool and blanks its block-table row — mandatory there, or the
-        pool leaks; cosmetic for contiguous (admission fully overwrites)."""
+        admission. In the paged layout this also releases the slot's page
+        references — a page returns to the pool at refcount zero, while
+        pages the prefix cache (or a sharing slot) still holds survive
+        intact — and blanks its block-table row. Mandatory for paged
+        engines, or the pool leaks; cosmetic for contiguous (admission
+        fully overwrites).
+
+        ``final_tokens`` (prefix-cache engines): the request's committed
+        stream — prompt + generated tokens, trimmed to what was actually
+        emitted. Every full page the stream verifies (its lookahead token
+        included) is indexed before the release, so the NEXT request
+        sharing the prefix — including this very request resuming after a
+        preemption — admits against cached pages."""
         self._slot_sampled[slot] = False
         if self.paged:
-            self.allocator.free(self._slot_pages[slot])
+            pages = self._slot_pages[slot]
+            if final_tokens is not None and pages and self._hits_ok():
+                self.prefix_cache.insert_stream(
+                    np.asarray(final_tokens, np.int32).reshape(-1), pages,
+                    self.allocator)
+            self.allocator.free(pages)
             self._slot_pages[slot] = []
             return self._paged_free(state, jnp.asarray(slot, jnp.int32))
         return self._free(state, jnp.asarray(slot, jnp.int32))
@@ -869,12 +1181,11 @@ class Engine:
 
     def _paged_free_impl(self, state, slot):
         core = {k: v for k, v in state.items() if k != "block_table"}
-        # blank the freed pages' position slots: incremental growth recycles
-        # pages into other slots' tables without an admission overwrite, so
-        # a free page must read as empty (cache_ops.blank_pages)
-        row = jax.lax.dynamic_index_in_dim(state["block_table"], slot,
-                                           keepdims=False)
-        core = cache_ops.blank_pages(core, row, self.pspec)
+        # NO page blanking here: the freed pages may still be mapped by the
+        # prefix cache or by sharing slots, and their content must survive.
+        # The blank-on-recycle invariant moved to the acquisition side —
+        # ensure_capacity blanks growth pages, admission scatters fully
+        # overwrite claimed pages (cache_ops.blank_pages docstring).
         core = cache_ops.reset_slot(
             core, slot, self.paged_axes,
             fills={"new_count": self.ecfg.max_new_tokens})

@@ -140,6 +140,8 @@ class Request:
     vt_finish: float = 0.0
     n_preempt: int = 0
     iters: int = 0                 # decode iterations this request was live
+    cached_tokens: int = 0         # prompt positions served from the prefix
+    #                                cache across all admissions (0 = cold)
     # internal bookkeeping
     _prev_new: int = 0             # device-side new_count at last sync
     _prev_last: int = 0            # device-side last position at last sync
@@ -257,13 +259,22 @@ class Scheduler:
         clock = 0.0
         events: List[Tuple[float, str, int]] = []
 
-        state = eng.blank_state()
+        # a prefix-cache engine resumes from the previous session's pool
+        # (cached page content lives in the state arrays); otherwise blank
+        state = eng.serve_state()
         active = np.zeros((B,), bool)
         max_new = np.zeros((B,), np.int32)
         slot_req: List[Optional[Request]] = [None] * B
         finished: List[Request] = []
         n_iters = 0
         n_preempt_total = 0
+
+        def committed_stream(req: Request) -> np.ndarray:
+            """prompt + emitted tokens — what a freed slot's pages verifiably
+            hold; the engine's prefix cache indexes its full pages so later
+            requests (or this one's resume) admit against them."""
+            return np.concatenate(
+                [req.prompt, np.asarray(req.out_tokens, np.int32)])
 
         def finish(s: int):
             nonlocal state
@@ -278,7 +289,8 @@ class Scheduler:
             # paged engines MUST free (pages return to the pool); contiguous
             # freeing is cosmetic and stays opt-out
             if self.free_on_finish or eng.paged:
-                state = eng.free_slot(state, s)
+                state = eng.free_slot(state, s,
+                                      final_tokens=committed_stream(req))
 
         def preempt_slot(s: int):
             """Evict slot s: pages freed, prompt + generated tokens retained
@@ -293,7 +305,8 @@ class Scheduler:
             n_preempt_total += 1
             active[s] = False
             slot_req[s] = None
-            state = eng.free_slot(state, s)
+            state = eng.free_slot(state, s,
+                                  final_tokens=committed_stream(req))
             bisect.insort(waiting, req, key=prio)
             events.append((clock, "preempt", req.rid))
 
@@ -306,10 +319,19 @@ class Scheduler:
         def head_admissible(req: Request) -> bool:
             # resumed requests gate on their full remaining need (anti-
             # thrash: a victim must not be re-evicted by the pressure that
-            # evicted it); fresh ones on the initial claim only
+            # evicted it); fresh ones on the initial claim only. The
+            # admission prompt is passed along so a prefix-cache engine
+            # gates on the EFFECTIVE need — pages the prompt will map from
+            # the cache never touch the free list
             plen = req.prompt.size + len(req.out_tokens)
             rem = req.max_new_tokens - len(req.out_tokens)
-            return eng.can_admit(plen, rem, full=req.n_preempt > 0)
+            stream = req.prompt
+            if req.out_tokens:
+                stream = committed_stream(req)
+                if not req.sampling.is_greedy:
+                    stream = stream[:-1]   # sampled resume prefills [:-1]
+            return eng.can_admit(plen, rem, full=req.n_preempt > 0,
+                                 tokens=stream)
 
         def clip_and_check_done(req: Request) -> bool:
             """Trim at the first stop token (scheduler ``eos_id`` or the
@@ -366,6 +388,7 @@ class Scheduler:
             state, first, last = eng.prefill_into_slot(
                 state, prompt, s, extras=extras, sampling=req.sampling,
                 max_new=remaining, resume=resume)
+            req.cached_tokens += eng.last_hit_tokens
             clock += self.prefill_cost
             if first is None:               # no-commit resume (sampled)
                 req._prev_new, req._prev_last = 0, last
@@ -487,6 +510,7 @@ class Scheduler:
                     finish(s)
 
         wall = time.perf_counter() - t_start
+        eng.retain_state(state)       # keep cached pages warm across serves
         return self._report(finished, wall, n_iters, clock, events,
                             n_preempt_total)
 
@@ -502,6 +526,7 @@ class Scheduler:
             "acceptance_length": r.acceptance_length,
             "arrival_time": r.arrival_time,
             "n_preempt": r.n_preempt,
+            "cached_tokens": r.cached_tokens,
             "wait_s": r.t_admit - r.t_submit,
             "latency_s": r.t_finish - r.t_submit,
             "wait_vt": r.vt_admit - r.arrival_time,
@@ -525,6 +550,10 @@ class Scheduler:
             "makespan_vt": makespan_vt,
             "otps_vt": total / max(makespan_vt, 1e-9),
             "preemptions": n_preempt,
+            # prefix-cache effectiveness (0s on cache-off engines)
+            "cache_hit_tokens": sum(r["cached_tokens"] for r in results),
+            "cache_hit_requests": sum(
+                1 for r in results if r["cached_tokens"] > 0),
             "p50_latency_vt": float(np.percentile(lat_vt, 50)),
             "p99_latency_vt": float(np.percentile(lat_vt, 99)),
             "p50_wait_vt": float(np.percentile(wait_vt, 50)),

@@ -298,6 +298,77 @@ def test_churn_allocator_hygiene_and_losslessness(n, seed):
     assert_pool_drained(eng)
 
 
+@lru_cache(maxsize=None)
+def get_cache_engine(pool_pages=0):
+    """Dense paged engine with the prefix cache enabled (dense is the only
+    family the sharing fast path serves; see serving/prefix_cache.py)."""
+    tcfg, dcfg, tparams, dparams = _setup("dense")
+    return Engine(tcfg, dcfg, tparams, dparams,
+                  EngineConfig(K=2, max_new_tokens=16,
+                               drafter_mode="parallel", max_len=64,
+                               kv_layout="paged", page_size=8,
+                               pool_pages=pool_pages,
+                               kv_growth="incremental",
+                               prefix_cache=True), 2)
+
+
+@settings(max_examples=3, deadline=None)
+@given(n=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+def test_cached_churn_refcounts_never_leak_or_alias(n, seed):
+    """The churn property suite's invariants, with the prefix cache in the
+    loop: random arrival/length/budget workloads over a tight pool — now
+    with admissions hitting cached pages, free-time inserts, LRU evictions
+    under growth pressure, and preemption decrefs interleaved — must leave
+    every stream equal to a solo run on a cache-OFF engine, and must leave
+    every pool page either free or cache-held at refcount exactly 1 (slots
+    all drained). Flushing the cache then fully drains the pool."""
+    eng = get_cache_engine(pool_pages=6)
+    ref = get_engine("dense", pool_pages=6)
+    reqs = churn_workload(seed, n, max_budget=6)
+    want = [(r.prompt.copy(), r.max_new_tokens) for r in reqs]
+    rep = Scheduler(eng).serve(reqs)
+    for res, (p, b) in zip(rep["results"], want):
+        np.testing.assert_array_equal(
+            res["tokens"], solo_tokens(ref, p, b),
+            err_msg=f"cached churn: rid {res['rid']} diverged")
+    # post-drain accounting: live pages == cache-held pages, each at
+    # refcount exactly 1 (any slot ref surviving the drain is a leak; any
+    # page indexed twice is aliasing)
+    alloc, cache = eng.allocator, eng.prefix_cache
+    assert all(not ps for ps in eng._slot_pages), "slot still holds pages"
+    held = cache.pages()
+    assert len(held) == len(set(held)), "cache aliases a page"
+    assert alloc.n_used == len(held), "page neither free nor cache-held"
+    assert all(alloc.refcount(p) == 1 for p in held), "leaked refcount"
+    assert alloc.peak_used <= eng.pool_pages
+    cache.flush(alloc)
+    assert_pool_drained(eng)
+
+
+def test_cached_preemption_stream_equals_uninterrupted():
+    """Preemption composes with the cache: an evicted request's free-time
+    insert leaves its own pages warm, so its recompute-prefill resume can
+    hit them — and the stream must still be token-for-token the solo run."""
+    eng = get_cache_engine(pool_pages=5)
+    ref = get_engine("dense", pool_pages=5)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, 200, size=6).astype(np.int32)
+               for _ in range(3)]
+    budgets = [14, 14, 8]
+    rep = Scheduler(eng).serve([Request(p, max_new_tokens=b)
+                                for p, b in zip(prompts, budgets)])
+    assert rep["preemptions"] >= 1, "workload was meant to force eviction"
+    hit_resumes = sum(r["cached_tokens"] > 0 for r in rep["results"])
+    for res, p, b in zip(rep["results"], prompts, budgets):
+        np.testing.assert_array_equal(
+            res["tokens"], solo_tokens(ref, p, b),
+            err_msg=f"cached: rid {res['rid']} diverged after preemption")
+    assert hit_resumes > 0, \
+        "a resume was expected to hit the eviction's own inserted pages"
+    eng.prefix_cache.flush(eng.allocator)
+    assert_pool_drained(eng)
+
+
 def test_virtual_clock_deterministic():
     """Identical workloads replay identical virtual-time traces: admissions,
     preemptions, finishes, and every latency metric — bit-equal."""

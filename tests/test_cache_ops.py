@@ -233,6 +233,114 @@ def test_allocator_never_leaks_or_aliases(n_pages, seed):
     assert a.n_free == n_pages
 
 
+def test_allocator_refcount_semantics():
+    """Refcounted frees: a page returns to the free list only when every
+    holder has released it — the sharing substrate of the prefix cache."""
+    a = cache_ops.BlockAllocator(4)
+    p = a.alloc(1)[0]
+    assert a.refcount(p) == 1
+    a.incref([p])
+    a.incref([p])
+    assert a.refcount(p) == 3
+    a.free([p])
+    a.free([p])
+    assert a.refcount(p) == 1 and a.n_free == 3   # still held
+    a.free([p])
+    assert a.refcount(p) == 0 and a.n_free == 4   # now recycled
+    with pytest.raises(ValueError):
+        a.free([p])                    # past zero == double free
+    with pytest.raises(ValueError):
+        a.incref([p])                  # can't revive a freed page
+    with pytest.raises(ValueError):
+        a.incref([99])                 # never allocated
+
+
+def test_allocator_reset_stats():
+    a = cache_ops.BlockAllocator(8)
+    p = a.alloc(6)
+    assert a.peak_used == 6
+    a.free(p[2:])
+    assert a.peak_used == 6            # peak is sticky ...
+    a.reset_stats()
+    assert a.peak_used == 2            # ... until reset re-bases it to now
+    a.alloc(3)
+    assert a.peak_used == 5
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_pages=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+def test_allocator_refcounts_never_leak_or_alias(n_pages, seed):
+    """Random alloc/incref/decref churn against a host-side model: the
+    allocator's refcounts track the model exactly, distinct live pages plus
+    the free list always cover the pool, and nothing is ever handed out
+    twice while held."""
+    rng = np.random.default_rng(seed)
+    a = cache_ops.BlockAllocator(n_pages)
+    refs: dict = {}                    # page -> expected refcount
+    for _ in range(80):
+        r = rng.random()
+        if refs and r < 0.35:          # decref a random holder
+            p = int(rng.choice(list(refs)))
+            a.free([p])
+            refs[p] -= 1
+            if refs[p] == 0:
+                del refs[p]
+        elif refs and r < 0.55:        # share a random live page
+            p = int(rng.choice(list(refs)))
+            a.incref([p])
+            refs[p] += 1
+        else:
+            got = a.alloc(int(rng.integers(0, n_pages + 1)))
+            if got is not None:
+                assert not set(got) & set(refs), "aliased a held page"
+                for p in got:
+                    refs[p] = 1
+        assert a.n_used == len(refs), "live-page count drifted"
+        assert a.n_used + a.n_free == n_pages, "leaked pages"
+        for p, want in refs.items():
+            assert a.refcount(p) == want
+    for p, want in list(refs.items()):
+        a.free([p] * want)
+    assert a.n_free == n_pages and a.n_used == 0
+
+
+def test_recycled_page_reads_empty():
+    """Blank-on-alloc pin: pages recycled through free/alloc — including the
+    decode-time growth path, which scatters nothing into the new page — must
+    gather as empty (positions -1), not as the previous tenant's stale KV.
+    (Blanking at free time is no longer possible: under refcounted sharing a
+    freed slot's pages may still be mapped by the prefix cache.)"""
+    eng = fresh_engine("dense", kv_layout="paged", kv_growth="incremental")
+    rng = np.random.default_rng(0)
+    state = eng.blank_state()
+    # tenant A dirties every pool page it can: long prompt, then freed
+    long = rng.integers(1, eng.tcfg.vocab_size - 2, size=16).astype(np.int32)
+    state, _, _ = eng.prefill_into_slot(state, long, 0)
+    state = eng.free_slot(state, 0)
+    # tenant B: short prompt, then pure growth over recycled pages
+    short = np.asarray([3, 1, 4], np.int32)
+    state, _, last = eng.prefill_into_slot(state, short, 0)
+    state, ok = eng.ensure_capacity(state, 0, 24)   # 3 pages, 2 recycled
+    assert ok
+    view = cache_ops.gather_state(
+        {k: v for k, v in state.items() if k != "block_table"},
+        state["block_table"], eng.pspec)
+
+    # any surviving entry from tenant A would carry a position in
+    # (last, 16) — stale history the attention mask would treat as valid
+    def check(node):
+        if isinstance(node, dict) and "positions" in node:
+            pos = np.asarray(node["positions"])
+            valid = pos[pos >= 0]
+            assert valid.size, "tenant B's own entries missing"
+            assert valid.max() <= last, \
+                f"recycled page leaked stale positions: {np.unique(valid)}"
+        elif isinstance(node, dict):
+            for v in node.values():
+                check(v)
+    check({k: v for k, v in view.items() if k in ("tcache", "dcache")})
+
+
 def test_no_page_leak_after_eos_and_rollback():
     """A full paged serve — speculative rollback-invalidation every
     iteration, EOS mid-stream retiring slots — must return every page."""

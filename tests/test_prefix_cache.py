@@ -1,0 +1,305 @@
+"""Prefix-cache suite: hash-cons index semantics, and the serving-level
+losslessness bar — a cache hit must be token-for-token identical to a cold
+prefill (ROADMAP), across model families, KV layouts, and mesh sizes.
+
+Structure:
+
+- **index unit tests** (no engine): the token-prefix chain walk, the
+  lookahead-token full/partial key split, full-key dedup, LRU refresh
+  rules, eviction pinning (refcount > 1 pages are skipped), and flush
+  draining the cache's allocator refs;
+- **`test_cache_hit_losslessness`** — the acceptance pin: a shared-preamble
+  workload served on a prefix-cache engine emits bit-identical streams to a
+  cache-off paged engine AND (dense, single-device) the contiguous-layout
+  engine, for dense (real hits), SSM, and hybrid (structurally idle cache —
+  recurrent drafter state is not positions-exact per page, so the fast path
+  is dense-gated and the cache must be a no-op) at mesh sizes 1/4/8;
+- **copy-on-write**: divergence exactly at a page's lookahead token serves
+  the page via CoW — copy, recompute only the final drafter entry — and
+  stays lossless while the shared original survives byte-stable;
+- **eviction under pressure**: a pool too small to index every stream still
+  serves losslessly, evicting LRU cache-only pages; pool accounting stays
+  exact (live = cache-held after drain; flush empties the pool).
+
+Sharded cases run in CI's tier1-multidevice lane
+(XLA_FLAGS=--xla_force_host_platform_device_count=8).
+"""
+from functools import lru_cache
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import DrafterConfig, get_config
+from repro.core import drafter as D
+from repro.models import get_model
+from repro.serving import (Engine, EngineConfig, PrefixCache, Request,
+                           Scheduler, cache_ops)
+from repro.sharding.utils import serving_mesh
+
+KEY = jax.random.PRNGKey(23)
+
+FAMILY_ARCHS = {
+    "dense": "qwen2-1.5b",
+    "ssm": "mamba2-780m",
+    "hybrid": "recurrentgemma-2b",
+}
+PS = 8          # page_size everywhere below
+
+
+from conftest import require_devices  # noqa: E402  (tests dir on sys.path)
+
+
+@lru_cache(maxsize=None)
+def _setup(family):
+    tcfg = get_config(FAMILY_ARCHS[family]).reduced()
+    m = get_model(tcfg)
+    tparams = m.init(KEY)
+    dcfg = DrafterConfig(n_layers=1, k_infer=2).resolve(tcfg)
+    dparams = D.init_params(dcfg, tcfg, jax.random.fold_in(KEY, 1))
+    return tcfg, dcfg, tparams, dparams
+
+
+@lru_cache(maxsize=None)
+def get_engine(family="dense", prefix_cache=False, pool_pages=0,
+               kv_layout="paged", shard=0):
+    if shard:
+        require_devices(shard)
+    tcfg, dcfg, tparams, dparams = _setup(family)
+    return Engine(tcfg, dcfg, tparams, dparams,
+                  EngineConfig(K=2, max_new_tokens=8,
+                               drafter_mode="parallel", max_len=64,
+                               kv_layout=kv_layout, page_size=PS,
+                               pool_pages=pool_pages,
+                               prefix_cache=prefix_cache,
+                               shard_model=shard > 0,
+                               mesh=serving_mesh(shard) if shard else None),
+                  batch=2)
+
+
+def shared_preamble_workload(pre_len, tails, seed=0):
+    """Prompts sharing a ``pre_len``-token preamble with distinct random
+    tails (the canonical serving-scale shape: system prompt + user turn)."""
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(1, 200, pre_len).astype(np.int32)
+    return [np.concatenate([pre, rng.integers(1, 200, t).astype(np.int32)])
+            for t in tails]
+
+
+def serve_tokens(eng, prompts, budget=8):
+    rep = Scheduler(eng).serve([Request(p, max_new_tokens=budget)
+                                for p in prompts])
+    return [r["tokens"] for r in rep["results"]], rep
+
+
+def assert_cache_consistent(eng):
+    """Post-drain pool accounting: every live page is cache-held at
+    refcount exactly 1, and flushing leaves the pool empty."""
+    cache, alloc = eng.prefix_cache, eng.allocator
+    pages = cache.pages()
+    assert len(pages) == len(set(pages)), "cache indexes a page twice"
+    assert alloc.n_used == len(pages), "pages live outside cache + slots"
+    assert all(alloc.refcount(p) == 1 for p in pages)
+    cache.flush(alloc)
+    assert alloc.n_used == 0 and alloc.n_free == eng.pool_pages
+    assert all(not ps for ps in eng._slot_pages)
+
+
+# ---------------------------------------------------------------------------
+# index unit tests (host-side, no engine)
+# ---------------------------------------------------------------------------
+
+def toks(*xs):
+    return np.asarray(xs, np.int32)
+
+
+def test_index_chain_walk_and_lookahead():
+    """A page is shareable only through its full key — chain plus the
+    lookahead token the drafter entry fused; same page bytes with a
+    different next token must NOT full-hit (but is the CoW source)."""
+    c = PrefixCache(4)
+    a = cache_ops.BlockAllocator(8)
+    stream = np.arange(1, 14, dtype=np.int32)       # 13 tokens, 3 pages
+    pages = a.alloc(3)
+    # pages 0..1 have their lookahead in-stream ((m+1)*4+1 <= 13); page 2
+    # covers 8..11 and token 12 is its lookahead -> also insertable? no:
+    # (2+1)*4+1 = 13 <= 13 -> yes, all three
+    assert c.insert_stream(stream, pages, a) == 3
+    assert all(a.refcount(p) == 2 for p in pages)   # slot ref + cache ref
+
+    shared, cow = c.match(stream)
+    assert shared == pages and cow is None
+    # divergence in page 1's BYTES: only page 0 full-hits, no CoW source
+    div = stream.copy()
+    div[5] = 99
+    shared, cow = c.match(div)
+    assert shared == pages[:1] and cow is None
+    # divergence exactly at page 1's LOOKAHEAD (token 8): pages 0 and...
+    # page 1's bytes (4..7) match but full key (tokens 0..8) differs ->
+    # shared stops at page 1? page 1 key = chain(pages 0,1) + token[8]
+    div2 = stream.copy()
+    div2[8] = 99
+    shared, cow = c.match(div2)
+    assert shared == pages[:1]
+    assert cow == pages[1], "byte-equal page with new lookahead must CoW"
+    # too-short stream: page 1 not probed for CoW without its full bytes
+    assert c.match(stream[:7])[0] == pages[:1]
+    assert c.match(stream[:7])[1] is None
+    for p in pages:
+        a.free([p])
+    c.flush(a)
+    assert a.n_free == 8
+
+
+def test_index_dedup_first_page_wins():
+    c = PrefixCache(4)
+    a = cache_ops.BlockAllocator(8)
+    stream = np.arange(1, 10, dtype=np.int32)       # 2 insertable pages
+    p1 = a.alloc(2)
+    p2 = a.alloc(2)
+    assert c.insert_stream(stream, p1, a) == 2
+    assert c.insert_stream(stream, p2, a) == 0      # dup keys: no new refs
+    assert c.match(stream)[0] == p1, "first physical page must win"
+    assert a.refcount(p2[0]) == 1 and a.refcount(p1[0]) == 2
+    a.free(p1 + p2)
+    c.flush(a)
+
+
+def test_match_len_is_read_only():
+    """Admission gating probes (can_admit) must not refresh LRU order —
+    probing is not reuse, and eviction order must reflect actual hits."""
+    c = PrefixCache(4)
+    a = cache_ops.BlockAllocator(8)
+    s1 = np.arange(1, 6, dtype=np.int32)            # 1 page
+    s2 = np.arange(50, 55, dtype=np.int32)          # 1 page, distinct chain
+    c.insert_stream(s1, a.alloc(1), a)
+    c.insert_stream(s2, a.alloc(1), a)
+    assert c.match_len(s1) == 1 and c.match_len(s2) == 1
+    a.free(c.pages())             # cache-only now (refcount 1, evictable)
+    c.match_len(s1)               # probe must NOT make s1 recently-used
+    assert c.evict(1, a) == 1
+    assert c.match_len(s1) == 0, "eviction should have taken the LRU page s1"
+    assert c.match_len(s2) == 1
+    c.flush(a)
+    assert a.n_free == 8
+
+
+def test_evict_skips_pinned_pages():
+    c = PrefixCache(4)
+    a = cache_ops.BlockAllocator(8)
+    s1 = np.arange(1, 6, dtype=np.int32)
+    s2 = np.arange(50, 55, dtype=np.int32)
+    p1 = a.alloc(1)
+    p2 = a.alloc(1)
+    c.insert_stream(s1, p1, a)
+    c.insert_stream(s2, p2, a)
+    a.free(p2)                    # s2's page: cache-only; s1's: still held
+    assert c.evictable(a) == 1
+    assert c.evict(2, a) == 1, "must skip the pinned page, not stall"
+    assert c.match_len(s1) == 1 and c.match_len(s2) == 0
+    a.free(p1)
+    c.flush(a)
+    assert a.n_free == 8
+
+
+# ---------------------------------------------------------------------------
+# the acceptance pin: cache hit == cold prefill, token for token
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family,shard", [
+    ("dense", 0), ("ssm", 0), ("hybrid", 0),
+    ("dense", 4), ("ssm", 4), ("hybrid", 4), ("dense", 8),
+])
+def test_cache_hit_losslessness(family, shard):
+    """Shared-preamble workload on a prefix-cache engine vs a cache-off
+    paged engine: every request's stream bit-equal; a second serve of the
+    same workload (pages now warm from the first, including free-time
+    inserts of generated tokens) also bit-equal. Dense must actually hit;
+    SSM/hybrid must be structurally idle (recurrent page content is not a
+    pure function of the page's own token span, so sharing is dense-only)
+    yet identical. Single-device dense additionally pins the hit streams
+    against the contiguous-layout engine (cross-layout bar)."""
+    warm = get_engine(family, prefix_cache=True, shard=shard)
+    cold = get_engine(family, shard=shard)
+    prompts = shared_preamble_workload(20, (3, 5, 7, 4))
+    cold_toks, _ = serve_tokens(cold, prompts)
+
+    for serve_pass in (1, 2):
+        warm_toks, rep = serve_tokens(warm, prompts)
+        for i, (c, w) in enumerate(zip(cold_toks, warm_toks)):
+            np.testing.assert_array_equal(
+                w, c, err_msg=f"{family}@mesh{shard}: request {i} diverged "
+                              f"on a cache hit (pass {serve_pass})")
+        if family == "dense":
+            assert rep["cache_hit_requests"] >= (2 if serve_pass == 1 else 4)
+            assert rep["cache_hit_tokens"] > 0
+        else:
+            assert rep["cache_hit_tokens"] == 0, \
+                "recurrent families must not take the sharing fast path"
+            assert len(warm.prefix_cache) == 0
+
+    if family == "dense" and shard == 0:
+        contig = get_engine(family, kv_layout="contiguous")
+        contig_toks, _ = serve_tokens(contig, prompts)
+        for c, w in zip(contig_toks, warm_toks):
+            np.testing.assert_array_equal(w, c)
+    assert_cache_consistent(warm)
+
+
+def test_cow_divergence_lossless():
+    """Preamble a multiple of page_size: the first divergent token IS a
+    cached page's lookahead, so admission must CoW that page — copy it,
+    recompute only its final drafter entry — and still match cold output."""
+    warm = get_engine("dense", prefix_cache=True)
+    cold = get_engine("dense")
+    prompts = shared_preamble_workload(3 * PS, (4, 4, 6), seed=1)
+    assert len({int(p[3 * PS]) for p in prompts}) > 1   # lookaheads differ
+    cold_toks, _ = serve_tokens(cold, prompts)
+    warm_toks, rep = serve_tokens(warm, prompts)
+    for c, w in zip(cold_toks, warm_toks):
+        np.testing.assert_array_equal(w, c)
+    assert warm.prefix_cache.stats["cow_hits"] >= 2
+    # the divergent requests still share the preamble's full pages
+    assert rep["cache_hit_tokens"] >= 2 * (3 * PS - 1)
+    assert_cache_consistent(warm)
+
+
+def test_eviction_under_pressure_lossless():
+    """A pool too small to index every served stream: LRU cache-only pages
+    are reclaimed to admit new work, streams stay bit-equal to a cache-off
+    engine, and accounting never drifts (no page both free and cached)."""
+    warm = get_engine("dense", prefix_cache=True, pool_pages=8)
+    cold = get_engine("dense", pool_pages=8)
+    prompts = shared_preamble_workload(16, (6, 6, 6, 6), seed=2)
+    cold_toks, _ = serve_tokens(cold, prompts, budget=4)
+    warm_toks, rep = serve_tokens(warm, prompts, budget=4)
+    for c, w in zip(cold_toks, warm_toks):
+        np.testing.assert_array_equal(w, c)
+    assert warm.prefix_cache.stats["evictions"] > 0, \
+        "pool was sized to force eviction"
+    assert rep["cache_hit_requests"] > 0, "eviction must not kill all hits"
+    assert warm.allocator.peak_used <= 8
+    assert_cache_consistent(warm)
+
+
+def test_cache_off_by_default_and_layout_guard():
+    eng = get_engine("dense")
+    assert eng.prefix_cache is None
+    tcfg, dcfg, tparams, dparams = _setup("dense")
+    with pytest.raises(ValueError, match="paged"):
+        Engine(tcfg, dcfg, tparams, dparams,
+               EngineConfig(K=2, max_new_tokens=8, max_len=64,
+                            kv_layout="contiguous", prefix_cache=True),
+               batch=2)
+
+
+def test_report_plumbs_per_request_hit_stats():
+    eng = get_engine("dense", prefix_cache=True, pool_pages=16)
+    prompts = shared_preamble_workload(16, (3, 4), seed=3)
+    _, rep = serve_tokens(eng, prompts, budget=3)
+    cached = [r["cached_tokens"] for r in rep["results"]]
+    assert cached[0] == 0, "first admission is necessarily cold"
+    assert cached[1] > 0, "second request shares two full pages"
+    assert rep["cache_hit_tokens"] == sum(cached)
+    assert rep["cache_hit_requests"] == 1
+    assert_cache_consistent(eng)
