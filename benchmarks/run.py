@@ -25,7 +25,7 @@ def main() -> None:
                             table8_seqlen, table9_acceptance, table10_otps,
                             table11_continuous, table12_paged, table13_async,
                             table14_sharded, table15_sampling,
-                            table16_prefix, roofline)
+                            table16_prefix, table17_streaming, roofline)
 
     epochs = 12 if args.quick else 22
     jobs = {
@@ -45,6 +45,7 @@ def main() -> None:
         "14": lambda: table14_sharded.run(epochs=epochs),
         "15": lambda: table15_sampling.run(epochs=epochs),
         "16": lambda: table16_prefix.run(epochs=epochs),
+        "17": lambda: table17_streaming.run(epochs=epochs),
         "roofline": lambda: roofline.run(),
     }
     wanted = list(jobs) if args.tables == "all" else [

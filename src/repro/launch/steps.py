@@ -249,6 +249,7 @@ def build_serve_step(tcfg: ModelConfig, dcfg: DrafterConfig,
             bsp = batch_spec(mesh)
             state_specs = {
                 "tokens": spec_for((GB, max_len), bsp[0]),
+                "logprobs": spec_for((GB, max_len), bsp[0]),
                 "last": spec_for((GB,), bsp[0]),
                 "taps_last": spec_for((GB, 3 * tcfg.d_model), bsp[0], "model"),
                 "tcache": cache_specs(state_sds["tcache"]),

@@ -1,11 +1,14 @@
 from repro.serving.engine import Engine, EngineConfig
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import SamplingParams
-from repro.serving.scheduler import (LLMEngine, Request, Scheduler,
-                                     serve_round_based)
+from repro.serving.scheduler import (ABORTED, FINISHED, LLMEngine, Request,
+                                     Scheduler, serve_round_based)
+from repro.serving.streaming import (AsyncEngine, StreamHandle,
+                                     virtual_twin_report)
 from repro.serving import cache_ops
 from repro.serving.cache_ops import BlockAllocator
 
-__all__ = ["BlockAllocator", "Engine", "EngineConfig", "LLMEngine",
-           "PrefixCache", "Request", "SamplingParams", "Scheduler",
-           "serve_round_based", "cache_ops"]
+__all__ = ["ABORTED", "AsyncEngine", "BlockAllocator", "Engine",
+           "EngineConfig", "FINISHED", "LLMEngine", "PrefixCache", "Request",
+           "SamplingParams", "Scheduler", "StreamHandle",
+           "serve_round_based", "virtual_twin_report", "cache_ops"]

@@ -177,6 +177,12 @@ def make_decode_state(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
     cdt = jnp.dtype(ecfg.cache_dtype) if cache_dtype is None else cache_dtype
     state = {
         "tokens": jnp.zeros((batch, ecfg.max_len), jnp.int32),
+        # log p(token) under the RAW target softmax at each committed
+        # position (the verification distribution, before any
+        # temperature/top-k/top-p warp) — one uniform convention for greedy
+        # and sampled rows, harvested alongside "tokens". Prompt positions
+        # are never written and read as 0.
+        "logprobs": jnp.zeros((batch, ecfg.max_len), jnp.float32),
         "last": jnp.full((batch,), last_fill, jnp.int32),
         "taps_last": jnp.zeros((batch, 3 * tcfg.d_model),
                                taps_dtype if taps_dtype is not None else cdt),
@@ -245,6 +251,11 @@ class Engine:
         # (0 on a cold admission) — the scheduler reads this right after the
         # call to account per-request hit stats
         self.last_hit_tokens = 0
+        # raw-target logprob of the token the most recent fresh (non-resume)
+        # prefill_into_slot committed — the scheduler pairs it with the
+        # returned first token (same read-after-call idiom as
+        # last_hit_tokens); 0.0 after a resume (nothing committed)
+        self.last_logprob = 0.0
         # host-side mirror of each slot's policy (sampled vs greedy) — set
         # at admission, cleared on free; lets step() pick the greedy-only
         # trace when nothing in the batch samples (purely a perf choice)
@@ -405,6 +416,8 @@ class Engine:
 
         state.update(
             tokens=tokens,
+            logprobs=state["logprobs"].at[:, fused].set(
+                _token_logprob(out.logits[:, -1], first)),
             last=jnp.full((B,), fused, jnp.int32),
             taps_last=out.taps[:, -1],
             tcache=out.cache,
@@ -480,6 +493,8 @@ class Engine:
         zero = jnp.zeros((B,), jnp.int32)
         state.update(
             tokens=tokens,
+            logprobs=state["logprobs"].at[jnp.arange(B), fused].set(
+                _token_logprob(out.logits[:, 0], first)),
             last=jnp.broadcast_to(fused, (B,)).astype(jnp.int32),
             taps_last=taps_last,
             tcache=cache_ops.commit(out.cache, None, cp, zero),
@@ -523,6 +538,8 @@ class Engine:
         new = dict(state)
         new.update(
             tokens=tokens,
+            logprobs=state["logprobs"].at[jnp.arange(B), fused].set(
+                _token_logprob(out.logits[:, -1], first)),
             last=jnp.broadcast_to(fused, (B,)).astype(jnp.int32),
             taps_last=out.taps[:, -1],
             tcache=out.cache,
@@ -755,21 +772,34 @@ class Engine:
                               + self.ecfg.K + 1)
 
     def initial_pages(self, prompt_len: int,
-                      max_new: Optional[int] = None) -> int:
+                      max_new: Optional[int] = None, *,
+                      resume: bool = False) -> int:
         """Pages admission claims up front. Upfront growth reserves the
         whole lifetime (``pages_needed``); incremental growth claims only
         the prompt plus one speculative block — ``ensure_capacity`` grows
         the allocation as the slot's length actually crosses page
-        boundaries during decode."""
+        boundaries during decode.
+
+        ``resume`` (incremental only): a no-commit recompute-prefill of a
+        preempted SAMPLED stream needs one position LESS than a fresh
+        admission of the same length. A fresh prefill of ``prompt_len``
+        tokens commits one extra token (last = prompt_len + offset), so the
+        next step writes positions up to last + K and the claim must cover
+        ``prompt_len + offset + K + 1``. A resume forces the stream's final
+        token at position ``prompt_len - 1 + offset`` without committing
+        past it, so the next step tops out one position earlier — claiming
+        the fresh-size block would over-reserve a page whenever
+        ``prompt_len + offset + K`` lands on a page boundary."""
         if not self.paged:
             return 0
         if not self.incremental:
             return self.pages_needed(prompt_len, max_new)
         return self.pages_for(prompt_len + self.pos_offset
-                              + self.commit_stride)
+                              + self.commit_stride - (1 if resume else 0))
 
     def can_admit(self, prompt_len: int, max_new: Optional[int] = None,
-                  full: bool = False, tokens=None) -> bool:
+                  full: bool = False, tokens=None,
+                  resume: bool = False) -> bool:
         """Whether the pool can admit one more request of this shape right
         now (always True for the contiguous layout — a free slot is a free
         max_len row). ``full`` gates on the whole-lifetime need even under
@@ -781,11 +811,16 @@ class Engine:
         are evicted LRU on allocation pressure, so a full pool of cold
         cache entries never wedges admission), and passing the prompt
         ``tokens`` gates on the EFFECTIVE post-hit need: pages the prompt
-        will map from the cache don't have to come off the free list."""
+        will map from the cache don't have to come off the free list.
+
+        ``resume`` must mirror the ``prefill_into_slot(resume=...)`` flag of
+        the admission being gated, so the gate prices exactly the pages the
+        claim will take (see :meth:`initial_pages` — a no-commit resume
+        claims one position less)."""
         if not self.paged:
             return True
         need = (self.pages_needed(prompt_len, max_new) if full
-                else self.initial_pages(prompt_len, max_new))
+                else self.initial_pages(prompt_len, max_new, resume=resume))
         avail = self.allocator.n_free
         if self.prefix_cache is not None:
             pinned = ()
@@ -895,6 +930,7 @@ class Engine:
         samp = batch_sampling_state(sp, 1)
         res = jnp.asarray(1 if resume else 0, jnp.int32)
         self.last_hit_tokens = 0
+        self.last_logprob = 0.0
         if not self.paged:
             src = self._admission_prefill(prompt, extras or {}, samp)
             state = self._admit(state, src, jnp.asarray(slot, jnp.int32),
@@ -904,7 +940,8 @@ class Engine:
                 raise RuntimeError(f"slot {slot} still holds pages; "
                                    "free_slot it before re-admission")
             n = self.initial_pages(int(prompt.shape[1]) + (1 if resume
-                                                           else 0), max_new)
+                                                           else 0), max_new,
+                                   resume=resume)
             hit = None
             if self._hits_ok(extras):
                 shared, cow = self.prefix_cache.match(np.asarray(prompt[0]))
@@ -934,8 +971,10 @@ class Engine:
                     self.prefix_cache.note_admission(0, False)
         last = int(src["last"][0])
         if resume:
+            self.last_logprob = 0.0
             return state, None, last
         first = int(src["tokens"][0, last])
+        self.last_logprob = float(src["logprobs"][0, last])
         return state, first, last
 
     @staticmethod
@@ -1071,6 +1110,8 @@ class Engine:
         new = dict(state)
         new.update(
             tokens=tokens,
+            logprobs=state["logprobs"].at[jnp.arange(B), fused].set(
+                _token_logprob(out.logits[:, -1], first)),
             last=jnp.broadcast_to(fused, (B,)).astype(jnp.int32),
             taps_last=out.taps[:, -1],
             tcache=out.cache,
@@ -1317,6 +1358,20 @@ class Engine:
         }
 
 
+def _token_logprob(logits, tok):
+    """log p(tok) under the raw softmax of ``logits`` at each position.
+
+    This is the engine's per-token logprob convention (see
+    make_decode_state): the RAW target distribution — what verification
+    scores against — not the warped sampling distribution, so greedy and
+    sampled rows report comparable values and the number is independent of
+    the request's temperature/top-k/top-p knobs. Broadcasts over leading
+    axes: (B, V) + (B,) -> (B,), (B, K+1, V) + (B, K+1) -> (B, K+1)."""
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    return jnp.take_along_axis(
+        lp, tok[..., None].astype(jnp.int32), axis=-1)[..., 0]
+
+
 def speculative_step(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
                  ecfg: EngineConfig, tparams, dparams, state,
                  active_mask: Optional[Array] = None,
@@ -1416,6 +1471,11 @@ def speculative_step(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
     safe_idx = jnp.where(keep, idx, state["tokens"].shape[1])
     tokens = jax.vmap(lambda t, i, v: t.at[i].set(v, mode="drop"))(
         state["tokens"], safe_idx, t_star)
+    # committed-token logprobs ride the same scatter: tout.logits[:, j] is
+    # the raw target distribution at position c+j, which determined the
+    # token committed at c+1+j — exactly the pairing _token_logprob scores
+    logprobs = jax.vmap(lambda t, i, v: t.at[i].set(v, mode="drop"))(
+        state["logprobs"], safe_idx, _token_logprob(tout.logits, t_star))
 
     new_last = jnp.where(active, c + accept_len + 1, c)
     taps_last = state["taps_last"]
@@ -1431,6 +1491,7 @@ def speculative_step(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
     ncommit = jnp.where(active, accept_len + 1, 0)
     new_state = dict(
         tokens=tokens,
+        logprobs=logprobs,
         last=new_last,
         taps_last=taps_last,
         tcache=tcache,

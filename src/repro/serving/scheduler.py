@@ -11,6 +11,17 @@ Request lifecycle::
       └────────── preempted (pages freed, ───────┘                    │
                   tokens kept host-side)                          FINISHED
 
+    (any state before FINISHED) ──abort──► ABORTED   [streaming driver:
+    pages freed immediately, partial output retained host-side]
+
+The loop core (admit → grow → dispatch → harvest) is a set of Scheduler
+methods shared by TWO drivers: the deterministic virtual-clock ``serve()``
+below, and the wall-clock ``serving/streaming.AsyncEngine`` that streams
+``(token, logprob)`` pairs as syncs commit. Every losslessness/churn
+property pinned against ``serve()`` therefore exercises the streaming
+path's scheduling logic too — the drivers differ only in who advances the
+clock and who consumes the emit buffer.
+
 The engine's decode state is a fixed-shape batch of B *slots*; every
 speculative iteration steps all B rows under a per-slot active mask. When a
 request finishes (per-request ``max_new_tokens`` budget or EOS), its slot is
@@ -98,12 +109,14 @@ QUEUED = "queued"
 PREFILLING = "prefilling"
 DECODING = "decoding"
 FINISHED = "finished"
+ABORTED = "aborted"
 
 _rid_counter = itertools.count()
 
 
-@dataclass
-class Request:
+@dataclass(eq=False)          # identity semantics: requests hold numpy
+class Request:                # arrays, and membership tests (abort from
+                              # the wait queue) must mean THIS request
     """One generation request. ``prompt`` is a 1-D int32 token array; the
     prefill commits the first generated token, which counts toward
     ``max_new_tokens`` (None = the engine's default budget).
@@ -132,6 +145,9 @@ class Request:
     status: str = QUEUED
     slot: Optional[int] = None
     out_tokens: List[int] = field(default_factory=list)
+    # raw-target logprob of each out_tokens entry (engine._token_logprob
+    # convention), maintained in lockstep with out_tokens
+    out_logprobs: List[float] = field(default_factory=list)
     # metrics
     t_submit: float = 0.0
     t_admit: float = 0.0
@@ -149,6 +165,9 @@ class Request:
     _committed: int = 0            # tokens committed across all admissions
     _prefills: int = 0             # prefill-committed tokens (1 + resumes)
     _seq: int = 0                  # submission index (FIFO tie-break)
+    _scanned: int = 0              # out_tokens prefix already stop-scanned
+    _emitted: int = 0              # out_tokens prefix already streamed out
+    _stop_set: Optional[frozenset] = None   # stop ids, frozen at submission
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -207,6 +226,412 @@ class Scheduler:
         self.iter_cost = float(iter_cost)
         self.prefill_cost = float(prefill_cost)
         self.preempt = True if preempt is None else bool(preempt)
+        # session state (created by _begin_session; one live session per
+        # Scheduler — serve() and a streaming.AsyncEngine each own theirs)
+        self._wall_t0: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    # shared loop core — the step/admit/preempt/harvest machinery both
+    # drivers call: the deterministic virtual-clock serve() below and the
+    # wall-clock streaming.AsyncEngine. Session state lives on the
+    # instance between _begin_session() and _end_session(); the only
+    # driver-visible difference is who advances self._clock (_advance).
+    # ------------------------------------------------------------------
+    def _prio(self, r: Request) -> Tuple[float, int]:
+        return (r.arrival_time, r._seq)
+
+    @staticmethod
+    def _committed_stream(req: Request) -> np.ndarray:
+        """prompt + emitted tokens — what a freed slot's pages verifiably
+        hold; the engine's prefix cache indexes its full pages so later
+        requests (or this one's resume) admit against them."""
+        return np.concatenate(
+            [req.prompt, np.asarray(req.out_tokens, np.int32)])
+
+    def _begin_session(self) -> None:
+        eng = self.engine
+        B = eng.batch
+        # a prefix-cache engine resumes from the previous session's pool
+        # (cached page content lives in the state arrays); otherwise blank
+        self._state = eng.serve_state()
+        self._active = np.zeros((B,), bool)
+        self._max_new = np.zeros((B,), np.int32)
+        self._slot_req: List[Optional[Request]] = [None] * B
+        self._waiting: List[Request] = []     # arrived, sorted by _prio
+        self._finished: List[Request] = []    # completed AND aborted
+        self._events: List[Tuple[float, str, int]] = []
+        self._emit: List[Tuple[Request, List[int], List[float]]] = []
+        self._clock = 0.0
+        self._n_iters = 0
+        self._n_preempt = 0
+        self._next_seq = 0
+        self._wall_t0 = None        # None → virtual clock (_advance adds)
+        self._t_start = time.perf_counter()
+
+    def _advance(self, cost: float) -> None:
+        """Advance the session clock past one unit of work: virtual
+        sessions add the deterministic step cost; wall sessions re-read
+        elapsed real time (the cost argument is a fiction there)."""
+        if self._wall_t0 is None:
+            self._clock += cost
+        else:
+            self._clock = time.perf_counter() - self._wall_t0
+
+    def _event(self, kind: str, rid: int, t: Optional[float] = None) -> None:
+        """Append to the event trace, keeping it sorted by time. Almost
+        every event is stamped at the current clock (monotone appends); an
+        out-of-order stamp — an arrival whose time the idle clock already
+        jumped past — is insorted so the trace stays non-decreasing
+        (pinned by tests/test_async_serving.py)."""
+        t = self._clock if t is None else t
+        ev = (t, kind, rid)
+        if self._events and t < self._events[-1][0]:
+            bisect.insort(self._events, ev, key=lambda e: e[0])
+        else:
+            self._events.append(ev)
+
+    def _prepare(self, r: Request, t_submit: Optional[float] = None) -> None:
+        """Validate + default-fill one request and assign its FIFO sequence
+        number. Raises ValueError before any state is touched."""
+        eng = self.engine
+        if r.status != QUEUED or r.out_tokens:
+            raise ValueError(
+                f"request {r.rid} is {r.status}; Request objects are "
+                "single-use — submit a fresh one")
+        if r.sampling is None:
+            r.sampling = eng.ecfg.sampling
+        if r.max_new_tokens is None:
+            r.max_new_tokens = (r.sampling.max_new_tokens
+                                if r.sampling.max_new_tokens is not None
+                                else eng.ecfg.max_new_tokens)
+        # prompt + budget + worst-case speculative overshoot must fit the
+        # cache, else the slot could never reach its budget
+        need = (r.prompt.size + eng.pos_offset + r.max_new_tokens
+                + eng.ecfg.K + 1)
+        if need > eng.ecfg.max_len:
+            raise ValueError(
+                f"request {r.rid}: prompt {r.prompt.size} + "
+                f"max_new_tokens {r.max_new_tokens} (+K overshoot) "
+                f"exceeds max_len {eng.ecfg.max_len}")
+        if eng.paged:
+            n = eng.pages_needed(r.prompt.size, r.max_new_tokens)
+            if n > eng.pool_pages:
+                raise ValueError(
+                    f"request {r.rid}: needs {n} KV pages but the pool "
+                    f"only has {eng.pool_pages}; it could never be "
+                    "admitted")
+        r.t_submit = (time.perf_counter() if t_submit is None else t_submit)
+        r._seq = self._next_seq
+        self._next_seq += 1
+        # freeze the stop set once — _clip_and_check_done runs per sync
+        stops = set(r.sampling.stop_token_ids)
+        if self.eos_id is not None:
+            stops.add(self.eos_id)
+        r._stop_set = frozenset(stops)
+
+    def _flush(self, req: Request) -> None:
+        """Queue newly FINAL tokens (scanned by _clip_and_check_done, so
+        nothing past a stop token or budget — a later sync can never trim
+        them) for the streaming driver. The batch driver discards the
+        buffer each pass."""
+        if len(req.out_tokens) > req._emitted:
+            self._emit.append((req, req.out_tokens[req._emitted:],
+                               req.out_logprobs[req._emitted:]))
+            req._emitted = len(req.out_tokens)
+
+    def _finish_slot(self, s: int) -> None:
+        eng = self.engine
+        req = self._slot_req[s]
+        req.status = FINISHED
+        # wall stamp AFTER device commit: both call sites sit downstream of
+        # a blocking host readback of the request's committed tokens (the
+        # harvest np.asarray / the admission prefill's last-position read),
+        # so sync_every pipelining can't leave the stamped work in flight
+        req.t_finish = time.perf_counter()
+        req.vt_finish = self._clock
+        self._active[s] = False
+        self._slot_req[s] = None
+        self._finished.append(req)
+        self._event("finish", req.rid)
+        # paged engines MUST free (pages return to the pool); contiguous
+        # freeing is cosmetic and stays opt-out
+        if self.free_on_finish or eng.paged:
+            self._state = eng.free_slot(
+                self._state, s, final_tokens=self._committed_stream(req))
+
+    def _abort(self, req: Request) -> bool:
+        """Cancel a request NOW: a queued request leaves the wait queue; a
+        running one has its slot freed immediately — pages return to the
+        pool (free_slot), already-harvested tokens stay valid host-side.
+        Returns False when the request already finished/aborted (too late
+        to cancel). Only the streaming driver calls this; the batch
+        serve() has no cancellation surface."""
+        if req.status in (FINISHED, ABORTED):
+            return False
+        if req.slot is not None:
+            s = req.slot
+            self._active[s] = False
+            self._slot_req[s] = None
+            self._state = self.engine.free_slot(
+                self._state, s, final_tokens=self._committed_stream(req))
+        elif req in self._waiting:
+            self._waiting.remove(req)
+        req.status = ABORTED
+        req.slot = None
+        req.t_finish = time.perf_counter()
+        req.vt_finish = self._clock
+        self._finished.append(req)
+        self._event("abort", req.rid)
+        return True
+
+    def _preempt_slot(self, s: int) -> None:
+        """Evict slot s: pages freed, prompt + generated tokens retained
+        host-side; the request re-enters the queue at its original
+        priority for a recompute-prefill resume."""
+        req = self._slot_req[s]
+        req.status = QUEUED
+        req.slot = None
+        req.n_preempt += 1
+        req._iters_base = req.iters
+        self._n_preempt += 1
+        self._active[s] = False
+        self._slot_req[s] = None
+        self._state = self.engine.free_slot(
+            self._state, s, final_tokens=self._committed_stream(req))
+        bisect.insort(self._waiting, req, key=self._prio)
+        self._event("preempt", req.rid)
+
+    def _lowest_prio_active(self) -> Optional[int]:
+        live = [s for s in range(self.engine.batch) if self._active[s]]
+        if not live:
+            return None
+        return max(live, key=lambda s: self._prio(self._slot_req[s]))
+
+    def _head_admissible(self, req: Request) -> bool:
+        # resumed requests gate on their full remaining need (anti-
+        # thrash: a victim must not be re-evicted by the pressure that
+        # evicted it); fresh ones on the initial claim only. The
+        # admission prompt is passed along so a prefix-cache engine
+        # gates on the EFFECTIVE need — pages the prompt will map from
+        # the cache never touch the free list. ``resume`` mirrors the
+        # prefill_into_slot flag so the gate prices the exact claim (a
+        # no-commit sampled resume needs one position less —
+        # Engine.initial_pages)
+        eng = self.engine
+        plen = req.prompt.size + len(req.out_tokens)
+        rem = req.max_new_tokens - len(req.out_tokens)
+        stream = req.prompt
+        resume = False
+        if req.out_tokens:
+            stream = self._committed_stream(req)
+            if not req.sampling.is_greedy:
+                stream = stream[:-1]   # sampled resume prefills [:-1]
+                resume = True
+        return eng.can_admit(plen, rem, full=req.n_preempt > 0,
+                             tokens=stream, resume=resume)
+
+    def _clip_and_check_done(self, req: Request) -> bool:
+        """Trim at the first stop token (scheduler ``eos_id`` or the
+        request's ``SamplingParams.stop_token_ids``) / budget; True when
+        the request is complete.
+
+        Incremental: only tokens appended since the previous call are
+        scanned (the ``req._scanned`` cursor) — a stop token can never
+        survive an earlier scan, so this equals the full rescan at O(n)
+        total work per stream instead of O(n²). It is also what makes
+        streaming sound: every position below ``_scanned`` is FINAL
+        (no later sync trims at or before it), so _flush may emit exactly
+        that prefix and never retract a token."""
+        out = req.out_tokens
+        done = False
+        for i in range(req._scanned, len(out)):
+            if out[i] in req._stop_set:
+                del out[i + 1:]
+                del req.out_logprobs[i + 1:]
+                done = True
+                break
+        if len(out) >= req.max_new_tokens:
+            del out[req.max_new_tokens:]         # speculative overshoot
+            del req.out_logprobs[req.max_new_tokens:]
+            done = True
+        req._scanned = len(out)
+        return done
+
+    def _admit(self, req: Request, s: int) -> None:
+        eng = self.engine
+        # recompute-prefill resume: the prefix is prompt + everything
+        # generated before eviction. Greedy continuation from that
+        # prefix is exactly the uninterrupted stream (the prefill's
+        # argmax commit equals the verify path's token); a sampled
+        # request instead resumes via resume=True — the prefill rebuilds
+        # the eviction's step-boundary state and commits nothing new, so
+        # the next step restarts seeded verification at the same
+        # committed prefix — and fold_in key — the uninterrupted run's
+        # step boundary had
+        prompt = (self._committed_stream(req) if req.out_tokens
+                  else req.prompt)
+        resume = bool(req.out_tokens) and not req.sampling.is_greedy
+        remaining = req.max_new_tokens - len(req.out_tokens)
+        req.status = PREFILLING
+        req.slot = s
+        first_admission = req.vt_admit is None
+        if first_admission:
+            req.vt_admit = self._clock
+        extras = req.extras
+        if extras is None and eng.tcfg.family in ("vlm", "encdec"):
+            # deterministic stub frontend inputs keyed by the PROMPT
+            # (not the process-global rid), so re-serving the same
+            # workload with fresh Request objects replays identical
+            # extras; cached on the request so a preemption resume
+            # (longer recompute prompt) also replays them
+            seed = zlib.crc32(req.prompt.tobytes()) & 0x7FFFFFFF
+            extras = make_extras(eng.tcfg, 1, "prefill",
+                                 jax.random.fold_in(jax.random.PRNGKey(0),
+                                                    seed))
+            req.extras = extras
+        self._event("admit", req.rid)
+        self._state, first, last = eng.prefill_into_slot(
+            self._state, prompt, s, extras=extras, sampling=req.sampling,
+            max_new=remaining, resume=resume)
+        if first_admission:
+            # wall stamp AFTER the prefill: prefill_into_slot's host
+            # readback of the committed position sequences every queued
+            # device dispatch before it, so t_admit marks work actually
+            # committed, not an enqueue (the virtual vt_admit keeps the
+            # admission-decision timestamp)
+            req.t_admit = time.perf_counter()
+        req.cached_tokens += eng.last_hit_tokens
+        self._advance(self.prefill_cost)
+        if first is None:               # no-commit resume (sampled)
+            req._prev_new, req._prev_last = 0, last
+        else:
+            req.out_tokens.append(first)
+            req.out_logprobs.append(eng.last_logprob)
+            req._committed += 1
+            req._prefills += 1
+            req._prev_new, req._prev_last = 1, last
+        req.status = DECODING
+        self._slot_req[s] = req
+        self._active[s] = True
+        self._max_new[s] = remaining
+        done = self._clip_and_check_done(req)
+        self._flush(req)
+        if done:                         # EOS at the very first token
+            self._finish_slot(s)
+
+    def _admit_waiting(self) -> None:
+        """Admit eligible requests into free slots, FIFO by (arrival,
+        submission) with head-of-line blocking; preemption resolves
+        starvation when the head outranks a runner. Free slots are
+        recomputed per admission — a slot freed by a preemption (or an
+        EOS-at-prefill) is reusable immediately, not after the next sync
+        block."""
+        B = self.engine.batch
+        while self._waiting:
+            free = [s for s in range(B) if not self._active[s]
+                    and self._slot_req[s] is None]
+            if not free:
+                break
+            head = self._waiting[0]
+            if not self._head_admissible(head):
+                if self.preempt:
+                    while not self._head_admissible(head):
+                        v = self._lowest_prio_active()
+                        if v is None or (self._prio(self._slot_req[v])
+                                         <= self._prio(head)):
+                            break
+                        self._preempt_slot(v)
+                if not self._head_admissible(head):
+                    break                # head waits for frees (FIFO)
+            self._admit(self._waiting.pop(0), free[0])
+
+    def _grow(self) -> np.ndarray:
+        """Capacity pass: grow each live slot to cover the coming sync
+        block (incremental paged growth); on pool exhaustion preempt the
+        lowest-priority slot, or stall when preemption is off. Returns the
+        run mask; raises when nothing can step at all."""
+        eng = self.engine
+        B = eng.batch
+        stalled = np.zeros((B,), bool)
+        if eng.incremental:
+            by_prio = sorted(np.flatnonzero(self._active),
+                             key=lambda s: self._prio(self._slot_req[s]))
+            for s in by_prio:
+                if not self._active[s]:      # already evicted this pass
+                    continue
+                req = self._slot_req[s]
+                cap = (req.prompt.size + eng.pos_offset
+                       + req.max_new_tokens + eng.ecfg.K + 1)
+                # a step at position c writes KV c..c+stride-1 and moves
+                # c by at most stride, so sync_every steps need length
+                # last + sync_every*stride, exactly
+                target = min(req._prev_last
+                             + self.sync_every * eng.commit_stride, cap)
+                self._state, ok = eng.ensure_capacity(self._state, int(s),
+                                                      target)
+                while not ok and self.preempt:
+                    v = self._lowest_prio_active()
+                    self._preempt_slot(v)
+                    if v == s:
+                        break
+                    self._state, ok = eng.ensure_capacity(self._state,
+                                                          int(s), target)
+                if not ok and self._active[s]:
+                    stalled[s] = True        # retry once pages free up
+        run = self._active & ~stalled
+        if not run.any():
+            raise RuntimeError(
+                "page pool exhausted and every live slot is stalled; "
+                "enable preemption (Scheduler(preempt=True)) or grow "
+                "pool_pages")
+        return run
+
+    def _dispatch(self, run: np.ndarray) -> None:
+        """sync_every speculative iterations over the live slots (jax
+        pipelines the dispatches; budget freezes happen on device
+        regardless)."""
+        eng = self.engine
+        act_dev, mn_dev = jnp.asarray(run), jnp.asarray(self._max_new)
+        for _ in range(self.sync_every):
+            self._state = eng.step(self._state, act_dev, mn_dev)
+            self._n_iters += 1
+            self._advance(self.iter_cost)
+
+    def _harvest(self) -> None:
+        """Read back the per-slot counters + newly committed tokens and
+        logprobs, stop/budget-trim each stream (incremental scan), flush
+        final tokens to the emit buffer, retire finished slots. The
+        np.asarray readbacks block on every dispatched step, so wall
+        stamps taken downstream mark committed work."""
+        state = self._state
+        new_count = np.asarray(state["new_count"])
+        slot_iters = np.asarray(state["slot_iters"])
+        last = np.asarray(state["last"])
+        tokens = np.asarray(state["tokens"])
+        logprobs = np.asarray(state["logprobs"])
+        for s in range(self.engine.batch):
+            req = self._slot_req[s]
+            if req is None or not self._active[s]:
+                continue
+            req.iters = req._iters_base + int(slot_iters[s])
+            if new_count[s] > req._prev_new:
+                lo, hi = req._prev_last + 1, last[s] + 1
+                req.out_tokens.extend(tokens[s, lo:hi].tolist())
+                req.out_logprobs.extend(
+                    logprobs[s, lo:hi].astype(float).tolist())
+                req._committed += int(new_count[s]) - req._prev_new
+                req._prev_new = int(new_count[s])
+                req._prev_last = int(last[s])
+            done = self._clip_and_check_done(req)
+            self._flush(req)
+            if done:
+                self._finish_slot(s)
+
+    def _end_session(self, wall: float) -> Dict[str, Any]:
+        # keep cached pages warm across serves
+        self.engine.retain_state(self._state)
+        return self._report(self._finished, wall, self._n_iters,
+                            self._clock, self._events, self._n_preempt)
 
     # ------------------------------------------------------------------
     def serve(self, requests: Sequence,
@@ -214,327 +639,94 @@ class Scheduler:
         """Run every request to completion; returns aggregate + per-request
         metrics (wall-clock and virtual-time). ``requests`` entries may be
         Request objects or raw prompt arrays (coerced with the engine's
-        default budget and sampling policy, arrival 0)."""
-        eng = self.engine
-        B = eng.batch
-        default_budget = eng.ecfg.max_new_tokens
+        default budget and sampling policy, arrival 0).
 
+        This is the deterministic VIRTUAL-CLOCK driver of the shared loop
+        core (admit → grow → dispatch → harvest); the wall-clock streaming
+        twin is serving/streaming.AsyncEngine. Identical per-request token
+        streams either way — row independence plus per-request seeded
+        sampling make each stream a pure function of (prompt, policy),
+        never of driver timing."""
         reqs = [r if isinstance(r, Request) else Request(r) for r in requests]
-        t_start = time.perf_counter()
-        for i, r in enumerate(reqs):
-            if r.status != QUEUED or r.out_tokens:
-                raise ValueError(
-                    f"request {r.rid} is {r.status}; Request objects are "
-                    "single-use — submit a fresh one")
-            r.t_submit = t_start
-            r._seq = i
-            if r.sampling is None:
-                r.sampling = eng.ecfg.sampling
-            if r.max_new_tokens is None:
-                r.max_new_tokens = (r.sampling.max_new_tokens
-                                    if r.sampling.max_new_tokens is not None
-                                    else default_budget)
-            # prompt + budget + worst-case speculative overshoot must fit the
-            # cache, else the slot could never reach its budget
-            need = (r.prompt.size + eng.pos_offset + r.max_new_tokens
-                    + eng.ecfg.K + 1)
-            if need > eng.ecfg.max_len:
-                raise ValueError(
-                    f"request {r.rid}: prompt {r.prompt.size} + "
-                    f"max_new_tokens {r.max_new_tokens} (+K overshoot) "
-                    f"exceeds max_len {eng.ecfg.max_len}")
-            if eng.paged:
-                n = eng.pages_needed(r.prompt.size, r.max_new_tokens)
-                if n > eng.pool_pages:
-                    raise ValueError(
-                        f"request {r.rid}: needs {n} KV pages but the pool "
-                        f"only has {eng.pool_pages}; it could never be "
-                        "admitted")
+        self._begin_session()
+        for r in reqs:
+            self._prepare(r, t_submit=self._t_start)
+        pending = deque(sorted(reqs, key=self._prio))   # not yet arrived
 
-        def prio(r: Request) -> Tuple[float, int]:
-            return (r.arrival_time, r._seq)
-
-        pending = deque(sorted(reqs, key=prio))   # not yet arrived
-        waiting: List[Request] = []               # arrived, sorted by prio
-        clock = 0.0
-        events: List[Tuple[float, str, int]] = []
-
-        # a prefix-cache engine resumes from the previous session's pool
-        # (cached page content lives in the state arrays); otherwise blank
-        state = eng.serve_state()
-        active = np.zeros((B,), bool)
-        max_new = np.zeros((B,), np.int32)
-        slot_req: List[Optional[Request]] = [None] * B
-        finished: List[Request] = []
-        n_iters = 0
-        n_preempt_total = 0
-
-        def committed_stream(req: Request) -> np.ndarray:
-            """prompt + emitted tokens — what a freed slot's pages verifiably
-            hold; the engine's prefix cache indexes its full pages so later
-            requests (or this one's resume) admit against them."""
-            return np.concatenate(
-                [req.prompt, np.asarray(req.out_tokens, np.int32)])
-
-        def finish(s: int):
-            nonlocal state
-            req = slot_req[s]
-            req.status = FINISHED
-            req.t_finish = time.perf_counter()
-            req.vt_finish = clock
-            active[s] = False
-            slot_req[s] = None
-            finished.append(req)
-            events.append((clock, "finish", req.rid))
-            # paged engines MUST free (pages return to the pool); contiguous
-            # freeing is cosmetic and stays opt-out
-            if self.free_on_finish or eng.paged:
-                state = eng.free_slot(state, s,
-                                      final_tokens=committed_stream(req))
-
-        def preempt_slot(s: int):
-            """Evict slot s: pages freed, prompt + generated tokens retained
-            host-side; the request re-enters the queue at its original
-            priority for a recompute-prefill resume."""
-            nonlocal state, n_preempt_total
-            req = slot_req[s]
-            req.status = QUEUED
-            req.slot = None
-            req.n_preempt += 1
-            req._iters_base = req.iters
-            n_preempt_total += 1
-            active[s] = False
-            slot_req[s] = None
-            state = eng.free_slot(state, s,
-                                  final_tokens=committed_stream(req))
-            bisect.insort(waiting, req, key=prio)
-            events.append((clock, "preempt", req.rid))
-
-        def lowest_prio_active() -> Optional[int]:
-            live = [s for s in range(B) if active[s]]
-            if not live:
-                return None
-            return max(live, key=lambda s: prio(slot_req[s]))
-
-        def head_admissible(req: Request) -> bool:
-            # resumed requests gate on their full remaining need (anti-
-            # thrash: a victim must not be re-evicted by the pressure that
-            # evicted it); fresh ones on the initial claim only. The
-            # admission prompt is passed along so a prefix-cache engine
-            # gates on the EFFECTIVE need — pages the prompt will map from
-            # the cache never touch the free list
-            plen = req.prompt.size + len(req.out_tokens)
-            rem = req.max_new_tokens - len(req.out_tokens)
-            stream = req.prompt
-            if req.out_tokens:
-                stream = committed_stream(req)
-                if not req.sampling.is_greedy:
-                    stream = stream[:-1]   # sampled resume prefills [:-1]
-            return eng.can_admit(plen, rem, full=req.n_preempt > 0,
-                                 tokens=stream)
-
-        def clip_and_check_done(req: Request) -> bool:
-            """Trim at the first stop token (scheduler ``eos_id`` or the
-            request's ``SamplingParams.stop_token_ids``) / budget; True when
-            the request is complete."""
-            out = req.out_tokens
-            done = False
-            stops = set(req.sampling.stop_token_ids)
-            if self.eos_id is not None:
-                stops.add(self.eos_id)
-            idx = min((out.index(t) for t in stops if t in out), default=None)
-            if idx is not None:
-                del out[idx + 1:]
-                done = True
-            if len(out) >= req.max_new_tokens:
-                del out[req.max_new_tokens:]     # speculative overshoot
-                done = True
-            return done
-
-        def admit(req: Request, s: int):
-            nonlocal state, clock
-            # recompute-prefill resume: the prefix is prompt + everything
-            # generated before eviction. Greedy continuation from that
-            # prefix is exactly the uninterrupted stream (the prefill's
-            # argmax commit equals the verify path's token); a sampled
-            # request instead resumes via resume=True — the prefill rebuilds
-            # the eviction's step-boundary state and commits nothing new, so
-            # the next step restarts seeded verification at the same
-            # committed prefix — and fold_in key — the uninterrupted run's
-            # step boundary had
-            prompt = (np.concatenate([req.prompt,
-                                      np.asarray(req.out_tokens, np.int32)])
-                      if req.out_tokens else req.prompt)
-            resume = bool(req.out_tokens) and not req.sampling.is_greedy
-            remaining = req.max_new_tokens - len(req.out_tokens)
-            req.status = PREFILLING
-            req.slot = s
-            if req.vt_admit is None:
-                req.vt_admit = clock
-                req.t_admit = time.perf_counter()
-            extras = req.extras
-            if extras is None and eng.tcfg.family in ("vlm", "encdec"):
-                # deterministic stub frontend inputs keyed by the PROMPT
-                # (not the process-global rid), so re-serving the same
-                # workload with fresh Request objects replays identical
-                # extras; cached on the request so a preemption resume
-                # (longer recompute prompt) also replays them
-                seed = zlib.crc32(req.prompt.tobytes()) & 0x7FFFFFFF
-                extras = make_extras(eng.tcfg, 1, "prefill",
-                                     jax.random.fold_in(jax.random.PRNGKey(0),
-                                                        seed))
-                req.extras = extras
-            events.append((clock, "admit", req.rid))
-            state, first, last = eng.prefill_into_slot(
-                state, prompt, s, extras=extras, sampling=req.sampling,
-                max_new=remaining, resume=resume)
-            req.cached_tokens += eng.last_hit_tokens
-            clock += self.prefill_cost
-            if first is None:               # no-commit resume (sampled)
-                req._prev_new, req._prev_last = 0, last
-            else:
-                req.out_tokens.append(first)
-                req._committed += 1
-                req._prefills += 1
-                req._prev_new, req._prev_last = 1, last
-            req.status = DECODING
-            slot_req[s] = req
-            active[s] = True
-            max_new[s] = remaining
-            if clip_and_check_done(req):     # EOS at the very first token
-                finish(s)
-
-        while pending or waiting or active.any():
+        while pending or self._waiting or self._active.any():
             # ---- arrivals: move everything whose time has come -----------
-            while pending and pending[0].arrival_time <= clock + 1e-9:
+            # (the arrive event is stamped at the true arrival_time, which
+            # the idle clock may already have jumped past — _event insorts
+            # it so the trace stays time-sorted)
+            while pending and pending[0].arrival_time <= self._clock + 1e-9:
                 r = pending.popleft()
-                bisect.insort(waiting, r, key=prio)
-                events.append((r.arrival_time, "arrive", r.rid))
+                bisect.insort(self._waiting, r, key=self._prio)
+                self._event("arrive", r.rid, t=r.arrival_time)
             # ---- idle: nothing eligible, nothing running → jump the clock
-            if not waiting and not active.any():
-                clock = max(clock, pending[0].arrival_time)
+            if not self._waiting and not self._active.any():
+                self._clock = max(self._clock, pending[0].arrival_time)
                 continue
 
-            # ---- admission: eligible requests into free slots, FIFO by
-            # (arrival, submission) with head-of-line blocking; preemption
-            # resolves starvation when the head outranks a runner. Free
-            # slots are recomputed per admission — a slot freed by a
-            # preemption (or an EOS-at-prefill) is reusable immediately,
-            # not after the next sync block ------------------------------
-            while waiting:
-                free = [s for s in range(B) if not active[s]
-                        and slot_req[s] is None]
-                if not free:
-                    break
-                head = waiting[0]
-                if not head_admissible(head):
-                    if self.preempt:
-                        while not head_admissible(head):
-                            v = lowest_prio_active()
-                            if v is None or prio(slot_req[v]) <= prio(head):
-                                break
-                            preempt_slot(v)
-                    if not head_admissible(head):
-                        break                # head waits for frees (FIFO)
-                admit(waiting.pop(0), free[0])
-
-            if not active.any():
-                if waiting:
+            self._admit_waiting()
+            if not self._active.any():
+                if self._waiting:
                     raise RuntimeError(
                         "no active slot and the head request cannot be "
                         "admitted — page pool leak?")
                 continue                     # everything died at prefill
 
-            # ---- capacity: grow each live slot to cover the coming sync
-            # block (incremental paged growth); on pool exhaustion preempt
-            # the lowest-priority slot, or stall when preemption is off ----
-            stalled = np.zeros((B,), bool)
-            if eng.incremental:
-                by_prio = sorted(np.flatnonzero(active),
-                                 key=lambda s: prio(slot_req[s]))
-                for s in by_prio:
-                    if not active[s]:        # already evicted this pass
-                        continue
-                    req = slot_req[s]
-                    cap = (req.prompt.size + eng.pos_offset
-                           + req.max_new_tokens + eng.ecfg.K + 1)
-                    # a step at position c writes KV c..c+stride-1 and moves
-                    # c by at most stride, so sync_every steps need length
-                    # last + sync_every*stride, exactly
-                    target = min(req._prev_last
-                                 + self.sync_every * eng.commit_stride, cap)
-                    state, ok = eng.ensure_capacity(state, int(s), target)
-                    while not ok and self.preempt:
-                        v = lowest_prio_active()
-                        preempt_slot(v)
-                        if v == s:
-                            break
-                        state, ok = eng.ensure_capacity(state, int(s), target)
-                    if not ok and active[s]:
-                        stalled[s] = True    # retry once pages free up
-            run = active & ~stalled
-            if not run.any():
-                raise RuntimeError(
-                    "page pool exhausted and every live slot is stalled; "
-                    "enable preemption (Scheduler(preempt=True)) or grow "
-                    "pool_pages")
-
-            # ---- speculative iterations over all live slots ---------------
-            # (several per sync when sync_every > 1 — jax pipelines the
-            # dispatches; budget freezes happen on device regardless)
-            act_dev, mn_dev = jnp.asarray(run), jnp.asarray(max_new)
-            for _ in range(self.sync_every):
-                state = eng.step(state, act_dev, mn_dev)
-                n_iters += 1
-                clock += self.iter_cost
-            if n_iters > max_iters:
+            run = self._grow()
+            self._dispatch(run)
+            if self._n_iters > max_iters:
                 raise RuntimeError("scheduler exceeded max_iters")
+            self._harvest()
+            self._emit.clear()               # batch driver: nobody streams
 
-            # ---- sync: harvest newly committed tokens, retire slots -------
-            new_count = np.asarray(state["new_count"])
-            slot_iters = np.asarray(state["slot_iters"])
-            last = np.asarray(state["last"])
-            tokens = np.asarray(state["tokens"])
-            for s in range(B):
-                req = slot_req[s]
-                if req is None or not active[s]:
-                    continue
-                req.iters = req._iters_base + int(slot_iters[s])
-                if new_count[s] > req._prev_new:
-                    req.out_tokens.extend(
-                        tokens[s, req._prev_last + 1:last[s] + 1].tolist())
-                    req._committed += int(new_count[s]) - req._prev_new
-                    req._prev_new = int(new_count[s])
-                    req._prev_last = int(last[s])
-                if clip_and_check_done(req):
-                    finish(s)
-
-        wall = time.perf_counter() - t_start
-        eng.retain_state(state)       # keep cached pages warm across serves
-        return self._report(finished, wall, n_iters, clock, events,
-                            n_preempt_total)
+        wall = time.perf_counter() - self._t_start
+        return self._end_session(wall)
 
     # ------------------------------------------------------------------
     def _report(self, finished: List[Request], wall: float, n_iters: int,
                 makespan_vt: float, events: List[Tuple[float, str, int]],
                 n_preempt: int) -> Dict[str, Any]:
+        """Aggregate + per-request metrics. Clock columns, honestly:
+
+        - ``*_s`` — HOST WALL stamps. t_admit is taken after the admission
+          prefill's committed-position readback and t_finish after the
+          harvest readback of the finishing sync, so both mark device work
+          that actually committed (never a queued dispatch); resolution is
+          the sync boundary (``sync_every`` iterations).
+        - ``*_vt`` — the deterministic clock: virtual step-cost units under
+          serve() (bit-identical across replays), wall seconds since
+          session start under the streaming driver (same code path, the
+          clock source is real time there).
+
+        Aborted requests (streaming driver only) appear in ``results`` with
+        ``aborted: True`` and their partial output; aggregate latency/AL
+        stats cover completed requests only, token totals cover both (the
+        work was done either way)."""
         results = [{
             "rid": r.rid,
             "tokens": np.asarray(r.out_tokens, np.int32),
+            "logprobs": np.asarray(r.out_logprobs, np.float32),
             "n_new": len(r.out_tokens),
             "iters": r.iters,
             "acceptance_length": r.acceptance_length,
             "arrival_time": r.arrival_time,
             "n_preempt": r.n_preempt,
             "cached_tokens": r.cached_tokens,
+            "aborted": r.status == ABORTED,
             "wait_s": r.t_admit - r.t_submit,
             "latency_s": r.t_finish - r.t_submit,
-            "wait_vt": r.vt_admit - r.arrival_time,
+            "wait_vt": (r.vt_admit - r.arrival_time
+                        if r.vt_admit is not None else float("nan")),
             "latency_vt": r.vt_finish - r.arrival_time,
         } for r in sorted(finished, key=lambda r: r.rid)]
         total = sum(r["n_new"] for r in results)
-        lat_vt = [r["latency_vt"] for r in results] or [0.0]
-        wait_vt = [r["wait_vt"] for r in results] or [0.0]
+        done = [r for r in results if not r["aborted"]]
+        lat_vt = [r["latency_vt"] for r in done] or [0.0]
+        wait_vt = [r["wait_vt"] for r in done
+                   if not np.isnan(r["wait_vt"])] or [0.0]
         return {
             "results": results,
             "n_requests": len(results),
@@ -543,13 +735,14 @@ class Scheduler:
             "wall_s": wall,
             "otps": total / max(wall, 1e-9),
             "mean_acceptance_length": float(np.mean(
-                [r["acceptance_length"] for r in results])) if results else 0.0,
+                [r["acceptance_length"] for r in done])) if done else 0.0,
             "mean_latency_s": float(np.mean(
-                [r["latency_s"] for r in results])) if results else 0.0,
-            # virtual-time (deterministic) latency profile + churn trace
+                [r["latency_s"] for r in done])) if done else 0.0,
+            # deterministic-clock latency profile + churn trace
             "makespan_vt": makespan_vt,
             "otps_vt": total / max(makespan_vt, 1e-9),
             "preemptions": n_preempt,
+            "aborted": len(results) - len(done),
             # prefix-cache effectiveness (0s on cache-off engines)
             "cache_hit_tokens": sum(r["cached_tokens"] for r in results),
             "cache_hit_requests": sum(

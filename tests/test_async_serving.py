@@ -392,6 +392,113 @@ def test_virtual_clock_deterministic():
         np.testing.assert_array_equal(ra["tokens"], rb["tokens"])
 
 
+def test_event_trace_monotonic_and_wall_stamps_ordered():
+    """The event trace is non-decreasing in time even when an arrival's
+    stamp lands in the past (the idle clock — or a long-running decode —
+    has already advanced beyond ``arrival_time`` when the arrival is
+    recorded; the scheduler insorts it instead of appending). Regression:
+    the trace used to interleave e.g. admit@3.0, arrive@2.5. Wall stamps
+    must be ordered per request too: submit <= admit <= finish, with both
+    taken after device commits."""
+    eng = get_engine("dense", pool_pages=5)
+    # staggered arrivals that land mid-decode of earlier requests, plus one
+    # far-future arrival the idle clock jumps over
+    reqs = churn_workload(21, 5, max_arrival=6.0)
+    reqs.append(Request(np.arange(1, 5, dtype=np.int32), max_new_tokens=2,
+                        arrival_time=500.0))
+    rep = Scheduler(eng).serve(reqs)
+    times = [t for t, _, _ in rep["events"]]
+    assert times == sorted(times), f"event trace not time-sorted: {rep['events']}"
+    kinds = {k for _, k, _ in rep["events"]}
+    assert "arrive" in kinds and "admit" in kinds and "finish" in kinds
+    # every request arrives exactly once, at its true arrival_time
+    arrivals = {rid: t for t, k, rid in rep["events"] if k == "arrive"}
+    for r in reqs:
+        assert arrivals[r.rid] == r.arrival_time
+    for res in rep["results"]:
+        assert res["wait_s"] >= 0.0
+        assert res["latency_s"] >= res["wait_s"]
+    assert_pool_drained(eng)
+
+
+def test_stop_token_in_early_committed_region_trims_at_first():
+    """Long-stream stop-trim regression: the incremental scan must finish a
+    request at the FIRST occurrence of a stop token, including one landing
+    in the prompt-adjacent committed region (the prefill-committed token
+    itself), and must behave identically to a full rescan when the id
+    recurs later in the stream."""
+    eng = get_engine("dense", pool_pages=0)
+    rng = np.random.default_rng(31)
+    p = rng.integers(1, 200, size=5).astype(np.int32)
+    ref = Scheduler(eng).serve([Request(p, max_new_tokens=16)])
+    full = ref["results"][0]["tokens"].tolist()
+    # the most prompt-adjacent stop possible: the prefill-committed token
+    eos = int(full[0])
+    rep = Scheduler(eng, eos_id=eos).serve([Request(p, max_new_tokens=16)])
+    got = rep["results"][0]["tokens"].tolist()
+    assert got == full[:full.index(eos) + 1]
+    assert len(got) == 1
+    # a stop mid-stream that recurs afterwards still trims at the first hit
+    counts = {t: full.count(t) for t in full}
+    recur = [t for t in full if counts[t] > 1]
+    eos2 = recur[0] if recur else int(full[3])
+    rep2 = Scheduler(eng, eos_id=eos2).serve([Request(p, max_new_tokens=16)])
+    got2 = rep2["results"][0]["tokens"].tolist()
+    assert got2 == full[:full.index(eos2) + 1]
+    assert_pool_drained(eng)
+
+
+def test_sampled_resume_exact_pool_no_deadlock_no_overreserve():
+    """Regression for the sampled-resume probe/claim mismatch: a no-commit
+    recompute-prefill (resume=True) needs coverage to one position LESS
+    than a fresh admission of the same stream, so when the stream length
+    lands exactly on that page boundary the old gate+claim priced one page
+    too many — can_admit said no (head-of-line deadlock on a nearly-full
+    pool) and the claim over-reserved when the pool did have slack. Pin:
+    with the pool sized exactly to the resume's true need, the gate says
+    yes, the prefill claims exactly that many pages (consuming the whole
+    pool), and the resumed stream still replays the solo run."""
+    eng = get_engine("dense", pool_pages=0)
+    sp = SamplingParams(temperature=0.8, seed=13)
+    rng = np.random.default_rng(41)
+    p = rng.integers(1, 200, size=6).astype(np.int32)
+    solo = Scheduler(eng).serve([Request(p, max_new_tokens=12, sampling=sp)])
+    toks = solo["results"][0]["tokens"].tolist()
+    assert_pool_drained(eng)
+    ps, off, K = eng.ecfg.page_size, eng.pos_offset, eng.ecfg.K
+    # cut the committed stream where a resume's coverage (stream + offset
+    # + K positions) lands exactly on a page boundary — the fresh pricing
+    # (one more position) would cross into an extra page right here
+    L = next(n for n in range(len(p) + 1, len(p) + len(toks))
+             if (n + off + K) % ps == 0)
+    stream = np.concatenate([p, np.asarray(toks, np.int32)])[:L]
+    want = eng.pages_for(L + off + K)
+    tight = get_engine("dense", pool_pages=want)      # exactly-full pool
+    assert tight.can_admit(L, 12 - (L - len(p)), tokens=stream, resume=True), \
+        "resume gate must accept a pool sized to its true need"
+    state = tight.serve_state()
+    state, first, last = tight.prefill_into_slot(
+        state, stream, 0, sampling=sp, max_new=12 - (L - len(p)),
+        resume=True)
+    assert first is None and last == L - 1 + off
+    assert len(tight._slot_pages[0]) == want, "resume over-reserved a page"
+    assert tight.allocator.n_free == 0
+    state = tight.free_slot(state, 0)
+    assert_pool_drained(tight)
+    # and end-to-end: the scheduler path (preempt → resume) on a tight pool
+    # still replays the solo stream bitwise (sampled-resume flag threaded
+    # through _head_admissible → can_admit → prefill_into_slot)
+    eng2 = get_engine("dense", pool_pages=5)
+    rep = Scheduler(eng2).serve(
+        [Request(p, max_new_tokens=12, sampling=sp),
+         Request(rng.integers(1, 200, size=6).astype(np.int32),
+                 max_new_tokens=14,
+                 sampling=SamplingParams(temperature=0.8, seed=14))])
+    res = rep["results"][0]
+    np.testing.assert_array_equal(res["tokens"], np.asarray(toks, np.int32))
+    assert_pool_drained(eng2)
+
+
 def test_idle_clock_jumps_to_next_arrival():
     """With nothing live the clock jumps to the next arrival instead of
     spinning: a lone late request is admitted exactly at its arrival."""

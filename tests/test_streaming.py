@@ -1,0 +1,441 @@
+"""Streaming front-end property suite (serving/streaming.AsyncEngine +
+launch/serve_stream NDJSON server).
+
+The acceptance pin is driver-twin equivalence: a wall-clock streamed run
+yields token-for-token (and logprob-for-logprob) exactly what the
+deterministic virtual-clock ``Scheduler.serve`` produces for the same
+(prompt, SamplingParams) workload — for greedy AND seeded-sampled
+requests, under churn, random aborts, preemption pressure, and
+backpressure. Plus the streaming-only invariants:
+
+- a yielded token is never retracted: an aborted stream's received prefix
+  is a prefix of the twin's full stream;
+- aborts free pages immediately — the pool drains after every session and
+  aborted slots are reused by later admissions (survivors still finish);
+- ``max_pending`` backpressure bounds in-flight requests without
+  deadlocking, and a rejected submit returns its admission ticket;
+- the NDJSON socket front-end round-trips generate/abort/health ops.
+
+Async plumbing note: everything runs through ``asyncio.run`` inside sync
+tests with a hard ``wait_for`` so a livelocked dispatch loop fails the
+test instead of hanging CI (the workflow additionally wraps this file in
+a process-level timeout).
+"""
+import asyncio
+import json
+from functools import lru_cache
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import DrafterConfig, get_config
+from repro.core import drafter as D
+from repro.launch.serve_stream import start_stream_server
+from repro.models import get_model
+from repro.serving import (AsyncEngine, Engine, EngineConfig,
+                           SamplingParams, virtual_twin_report)
+
+KEY = jax.random.PRNGKey(23)
+
+
+@lru_cache(maxsize=None)
+def _setup():
+    tcfg = get_config("qwen2-1.5b").reduced()
+    m = get_model(tcfg)
+    tparams = m.init(KEY)
+    dcfg = DrafterConfig(n_layers=1, k_infer=2).resolve(tcfg)
+    dparams = D.init_params(dcfg, tcfg, jax.random.fold_in(KEY, 1))
+    return tcfg, dcfg, tparams, dparams
+
+
+@lru_cache(maxsize=None)
+def get_engine(pool_pages=0, batch=2):
+    tcfg, dcfg, tparams, dparams = _setup()
+    return Engine(tcfg, dcfg, tparams, dparams,
+                  EngineConfig(K=2, max_new_tokens=16,
+                               drafter_mode="parallel", max_len=64,
+                               kv_layout="paged", page_size=8,
+                               pool_pages=pool_pages,
+                               kv_growth="incremental"), batch)
+
+
+def run(coro, timeout=600):
+    return asyncio.run(asyncio.wait_for(coro, timeout))
+
+
+def assert_pool_drained(eng):
+    assert eng.allocator.n_free == eng.pool_pages, "leaked pages"
+    assert all(not ps for ps in eng._slot_pages), "slot still holds pages"
+
+
+def make_workload(seed, n, max_budget=8):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        p = rng.integers(1, 200,
+                         size=int(rng.integers(2, 9))).astype(np.int32)
+        sp = (None if i % 2 == 0
+              else SamplingParams(temperature=0.8, seed=50 + i))
+        out.append((p, sp, int(rng.integers(2, max_budget + 1))))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# driver-twin equivalence (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["greedy", "sampled"])
+def test_streamed_equals_virtual_twin(policy):
+    """Concurrent generate() streams — arriving in wall-clock order the
+    virtual twin never saw — yield exactly the twin's per-request token
+    and logprob sequences, both policies."""
+    eng = get_engine()
+    rng = np.random.default_rng(1 if policy == "greedy" else 2)
+    workload = [(rng.integers(1, 200, size=int(rng.integers(2, 9))
+                              ).astype(np.int32),
+                 None if policy == "greedy"
+                 else SamplingParams(temperature=0.7, top_p=0.9, seed=7 + i),
+                 int(rng.integers(3, 9)))
+                for i in range(5)]
+    twin = virtual_twin_report(eng, workload)
+    assert_pool_drained(eng)
+
+    async def go():
+        aeng = AsyncEngine(eng)
+
+        async def one(p, sp, b):
+            out = []
+            async for tok, lp in aeng.generate(p, sp, max_new_tokens=b):
+                out.append((tok, lp))
+            return out
+
+        streams = await asyncio.gather(*(one(*w) for w in workload))
+        return streams, await aeng.close()
+
+    streams, rep = run(go())
+    assert rep["aborted"] == 0 and rep["n_requests"] == len(workload)
+    for got, ref in zip(streams, twin["results"]):
+        assert [t for t, _ in got] == ref["tokens"].tolist()
+        np.testing.assert_allclose(
+            np.asarray([lp for _, lp in got], np.float32),
+            ref["logprobs"], rtol=1e-5)
+    assert_pool_drained(eng)
+
+
+def test_streamed_tokens_never_exceed_stop_or_budget():
+    """The emit path flushes only stop/budget-trimmed FINAL tokens: with a
+    stop id planted mid-stream, the streamed sequence ends exactly at its
+    first occurrence — never a token after it."""
+    eng = get_engine()
+    rng = np.random.default_rng(3)
+    p = rng.integers(1, 200, size=5).astype(np.int32)
+    ref = virtual_twin_report(eng, [(p, None, 12)])["results"][0]
+    stop = int(ref["tokens"][4])
+    want = ref["tokens"].tolist()
+    want = want[:want.index(stop) + 1]
+
+    async def go():
+        aeng = AsyncEngine(eng, eos_id=stop)
+        out = [t async for t, _ in aeng.generate(p, max_new_tokens=12)]
+        await aeng.close()
+        return out
+
+    assert run(go()) == want
+    assert_pool_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# churn + aborts under pool pressure
+# ---------------------------------------------------------------------------
+
+def test_churn_random_aborts_no_leaks_survivors_exact():
+    """Concurrent streams over a deliberately tight pool with random
+    mid-stream aborts: no page leaks, aborted slots get reused (survivors
+    all finish), every survivor matches the virtual twin token-for-token,
+    and every aborted stream's received prefix is a prefix of its twin
+    stream (nothing yielded was ever wrong)."""
+    eng = get_engine(pool_pages=6)
+    workload = make_workload(seed=4, n=8)
+    twin = virtual_twin_report(eng, workload)
+    assert_pool_drained(eng)
+    rng = np.random.default_rng(5)
+    # abort roughly half the requests after 1..3 received tokens
+    abort_after = {i: int(rng.integers(1, 4))
+                   for i in range(len(workload)) if rng.random() < 0.5}
+
+    async def go():
+        aeng = AsyncEngine(eng, max_pending=4)
+
+        async def one(i, p, sp, b):
+            out, handle = [], await aeng.submit(p, sp, max_new_tokens=b)
+            async for tok, _ in handle:
+                out.append(tok)
+                if len(out) == abort_after.get(i):
+                    handle.abort()
+            return out, handle.aborted
+
+        res = await asyncio.gather(*(one(i, *w)
+                                     for i, w in enumerate(workload)))
+        return res, await aeng.close()
+
+    res, rep = run(go())
+    n_aborted = sum(ab for _, ab in res)
+    assert rep["aborted"] == n_aborted
+    for (got, ab), ref in zip(res, twin["results"]):
+        full = ref["tokens"].tolist()
+        if ab:
+            assert got == full[:len(got)], "aborted stream retracted a token"
+        else:
+            assert got == full, "survivor diverged from the virtual twin"
+    # the tight pool forces slot turnover, so if aborted pages leaked the
+    # survivors could not all have finished; verify the books directly too
+    assert_pool_drained(eng)
+
+
+def test_abort_waiting_request_before_admission():
+    """Aborting a still-queued request removes it without a slot ever being
+    claimed; co-submitted requests are untouched."""
+    eng = get_engine()
+    workload = make_workload(seed=6, n=2)
+    twin = virtual_twin_report(eng, workload)
+    assert_pool_drained(eng)
+    rng = np.random.default_rng(7)
+    extra = rng.integers(1, 200, size=4).astype(np.int32)
+
+    async def go():
+        aeng = AsyncEngine(eng, max_pending=8)
+        handles = [await aeng.submit(p, sp, max_new_tokens=b)
+                   for p, sp, b in workload]
+        victim = await aeng.submit(extra, max_new_tokens=8)
+        assert victim.abort()
+        assert not victim.abort(), "abort must be idempotent"
+        streams = []
+        for h in handles:
+            streams.append([t async for t, _ in h])
+        vic = [t async for t, _ in victim]
+        return streams, vic, await aeng.close()
+
+    streams, vic, rep = run(go())
+    assert rep["aborted"] == 1
+    aborted_row = [r for r in rep["results"] if r["aborted"]]
+    assert len(aborted_row) == 1 and aborted_row[0]["n_new"] == 0
+    assert vic == []
+    for got, ref in zip(streams, twin["results"]):
+        assert got == ref["tokens"].tolist()
+    assert_pool_drained(eng)
+
+
+def test_close_without_drain_aborts_inflight():
+    eng = get_engine()
+    rng = np.random.default_rng(8)
+    p = rng.integers(1, 200, size=6).astype(np.int32)
+
+    async def go():
+        aeng = AsyncEngine(eng)
+        handle = await aeng.submit(p, max_new_tokens=16)
+        rep = await aeng.close(drain=False)
+        return handle.aborted, rep
+
+    aborted, rep = run(go())
+    assert aborted and rep["aborted"] == 1
+    assert_pool_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# backpressure + health
+# ---------------------------------------------------------------------------
+
+def test_backpressure_bounds_inflight_without_deadlock():
+    """max_pending admission tickets cap queued+running requests; a
+    monitor sampling health() between syncs must never observe more, and
+    every request still completes (tickets are released on finish)."""
+    eng = get_engine()
+    workload = make_workload(seed=9, n=6, max_budget=5)
+    twin = virtual_twin_report(eng, workload)
+    assert_pool_drained(eng)
+
+    async def go():
+        aeng = AsyncEngine(eng, max_pending=2)
+        await aeng.start()
+        seen = []
+        stop = asyncio.Event()
+
+        async def monitor():
+            while not stop.is_set():
+                seen.append(aeng.health()["inflight"])
+                await asyncio.sleep(0)
+
+        async def one(p, sp, b):
+            return [t async for t, _ in aeng.generate(p, sp,
+                                                      max_new_tokens=b)]
+
+        mon = asyncio.get_running_loop().create_task(monitor())
+        streams = await asyncio.gather(*(one(*w) for w in workload))
+        stop.set()
+        await mon
+        return streams, seen, await aeng.close()
+
+    streams, seen, rep = run(go())
+    assert max(seen) <= 2 and max(seen) >= 1
+    assert rep["n_requests"] == len(workload) and rep["aborted"] == 0
+    for got, ref in zip(streams, twin["results"]):
+        assert got == ref["tokens"].tolist()
+    assert_pool_drained(eng)
+
+
+def test_rejected_submit_returns_ticket():
+    """A submit that fails validation (budget can never fit max_len) must
+    not consume an admission ticket: with max_pending=1 a follow-up valid
+    request still goes through."""
+    eng = get_engine()
+    rng = np.random.default_rng(10)
+    p = rng.integers(1, 200, size=4).astype(np.int32)
+
+    async def go():
+        aeng = AsyncEngine(eng, max_pending=1)
+        with pytest.raises(ValueError):
+            await aeng.submit(p, max_new_tokens=10_000)
+        out = [t async for t, _ in aeng.generate(p, max_new_tokens=3)]
+        return out, await aeng.close()
+
+    out, rep = run(go())
+    assert len(out) == 3 and rep["n_requests"] == 1
+    assert_pool_drained(eng)
+
+
+def test_health_snapshot_shape():
+    eng = get_engine()
+    rng = np.random.default_rng(11)
+    p = rng.integers(1, 200, size=4).astype(np.int32)
+
+    async def go():
+        aeng = AsyncEngine(eng)
+        out = [t async for t, _ in aeng.generate(p, max_new_tokens=4)]
+        h = aeng.health()
+        rep = await aeng.close()
+        return out, h, rep
+
+    out, h, rep = run(go())
+    assert len(out) == 4
+    for k in ("queue_depth", "running", "slots", "inflight", "max_pending",
+              "pool_pages", "pool_free", "pool_occupancy", "finished",
+              "aborted", "preemptions", "p50_wait_s", "p99_wait_s",
+              "uptime_s"):
+        assert k in h, k
+    assert h["finished"] == 1 and h["queue_depth"] == 0
+    assert h["slots"] == eng.batch and h["pool_pages"] == eng.pool_pages
+    assert 0.0 <= h["pool_occupancy"] <= 1.0
+    assert h["p99_wait_s"] >= h["p50_wait_s"] >= 0.0
+    assert rep["results"][0]["wait_s"] >= 0.0
+    assert rep["results"][0]["latency_s"] >= rep["results"][0]["wait_s"]
+
+
+# ---------------------------------------------------------------------------
+# NDJSON socket front-end
+# ---------------------------------------------------------------------------
+
+def test_ndjson_socket_roundtrip():
+    """generate (greedy + sampled) / abort / health / unknown-op over a real
+    socket: streamed tokens match the virtual twin, the aborted stream
+    terminates with an aborted done event, bad ops get error events."""
+    eng = get_engine()
+    rng = np.random.default_rng(12)
+    p0 = rng.integers(1, 200, size=5).astype(np.int32)
+    p1 = rng.integers(1, 200, size=7).astype(np.int32)
+    sp1 = SamplingParams(temperature=0.8, seed=3)
+    twin = virtual_twin_report(eng, [(p0, None, 5), (p1, sp1, 6)])
+    assert_pool_drained(eng)
+
+    async def go():
+        aeng = AsyncEngine(eng)
+        server = await start_stream_server(aeng, port=0)
+        port = server.sockets[0].getsockname()[1]
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+
+        def send(obj):
+            writer.write((json.dumps(obj) + "\n").encode())
+
+        send({"op": "generate", "id": "g", "prompt": p0.tolist(),
+              "max_new_tokens": 5})
+        send({"op": "generate", "id": "s", "prompt": p1.tolist(),
+              "max_new_tokens": 6, "temperature": 0.8, "seed": 3})
+        send({"op": "generate", "id": "a", "prompt": p0.tolist(),
+              "max_new_tokens": 16})
+        send({"op": "abort", "id": "a"})
+        send({"op": "health"})
+        send({"op": "nonsense"})
+        await writer.drain()
+        toks, lps, done, health, errors = {}, {}, {}, None, []
+        while len(done) < 3 or health is None or not errors:
+            msg = json.loads(await reader.readline())
+            ev = msg.get("event")
+            if ev == "tokens":
+                toks.setdefault(msg["id"], []).extend(msg["tokens"])
+                lps.setdefault(msg["id"], []).extend(msg["logprobs"])
+            elif ev == "done":
+                done[msg["id"]] = msg
+            elif ev == "health":
+                health = msg
+            elif ev == "error":
+                errors.append(msg)
+        writer.close()
+        server.close()
+        await server.wait_closed()
+        await aeng.close()
+        return toks, lps, done, health, errors
+
+    toks, lps, done, health, errors = run(go())
+    assert toks["g"] == twin["results"][0]["tokens"].tolist()
+    assert toks["s"] == twin["results"][1]["tokens"].tolist()
+    np.testing.assert_allclose(np.asarray(lps["s"], np.float32),
+                               twin["results"][1]["logprobs"], rtol=1e-5)
+    assert not done["g"]["aborted"] and done["g"]["n_new"] == 5
+    assert not done["s"]["aborted"] and done["s"]["n_new"] == 6
+    assert done["a"]["aborted"] and done["a"]["n_new"] < 16
+    assert toks.get("a", []) == twin["results"][0]["tokens"].tolist(
+        )[:len(toks.get("a", []))]
+    assert health["slots"] == eng.batch
+    assert any("unknown op" in e["message"] for e in errors)
+    assert_pool_drained(eng)
+
+
+def test_socket_disconnect_aborts_inflight():
+    """Dropping the connection mid-stream must abort its requests so pages
+    return to the pool (a vanished client cannot pin slots).
+
+    A single request can win the race and finish its whole budget before
+    the server notices the reset, so the pin uses a batch=1 engine with a
+    SECOND, queued request: the queued one cannot complete before the
+    disconnect lands, making the abort deterministic."""
+    eng = get_engine(0, 1)
+    rng = np.random.default_rng(13)
+    p = rng.integers(1, 200, size=6).astype(np.int32)
+    q = rng.integers(1, 200, size=5).astype(np.int32)
+
+    async def go():
+        aeng = AsyncEngine(eng)
+        server = await start_stream_server(aeng, port=0)
+        port = server.sockets[0].getsockname()[1]
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+        for cid, prompt in (("x", p), ("y", q)):
+            writer.write((json.dumps(
+                {"op": "generate", "id": cid, "prompt": prompt.tolist(),
+                 "max_new_tokens": 16}) + "\n").encode())
+        await writer.drain()
+        await reader.readline()              # first tokens event: running
+        writer.close()                       # vanish mid-stream
+        # the abort lands on the server loop; wait for the session to go idle
+        for _ in range(2000):
+            h = aeng.health()
+            if h["inflight"] == 0:
+                break
+            await asyncio.sleep(0.01)
+        server.close()
+        await server.wait_closed()
+        rep = await aeng.close()
+        return rep
+
+    rep = run(go())
+    assert rep["aborted"] >= 1
+    assert_pool_drained(eng)
