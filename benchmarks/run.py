@@ -25,7 +25,8 @@ def main() -> None:
                             table8_seqlen, table9_acceptance, table10_otps,
                             table11_continuous, table12_paged, table13_async,
                             table14_sharded, table15_sampling,
-                            table16_prefix, table17_streaming, roofline)
+                            table16_prefix, table17_streaming,
+                            table18_adaptive, roofline)
 
     epochs = 12 if args.quick else 22
     jobs = {
@@ -46,6 +47,7 @@ def main() -> None:
         "15": lambda: table15_sampling.run(epochs=epochs),
         "16": lambda: table16_prefix.run(epochs=epochs),
         "17": lambda: table17_streaming.run(epochs=epochs),
+        "18": lambda: table18_adaptive.run(epochs=epochs),
         "roofline": lambda: roofline.run(),
     }
     wanted = list(jobs) if args.tables == "all" else [

@@ -62,7 +62,7 @@ def run(epochs=15, batch=4, n_requests=12, max_new=24):
             sp = co["otps"] / max(rb["otps"], 1e-9)
             row(f"table11/cont_{mode}_s{sync_every}",
                 1e6 / max(co["otps"], 1e-9),
-                f"OTPS={co['otps']:.1f} AL={co['mean_acceptance_length']:.2f} "
+                f"OTPS={co['otps']:.1f} AL={co['weighted_acceptance_length']:.2f} "
                 f"vs_round={sp:.2f}x "
                 f"mean_latency_ms={co['mean_latency_s'] * 1e3:.0f}")
             results[(mode, sync_every)] = (rb["otps"], co["otps"], sp)

@@ -73,12 +73,12 @@ def run(epochs=15, n_requests=16, max_new=24):
         rep = serve([params(t, i) for i in range(n_requests)])
         results[t] = rep
         csv_rows.append({"discipline": f"T={t}", "temperature": t,
-                         "acceptance_length": rep["mean_acceptance_length"],
+                         "acceptance_length": rep["weighted_acceptance_length"],
                          "otps": rep["otps"],
                          "total_new_tokens": rep["total_new_tokens"],
                          "iterations": rep["iterations"]})
         row(f"table15/T{t}", 1e6 / max(rep["otps"], 1e-9),
-            f"AL={rep['mean_acceptance_length']:.2f} "
+            f"AL={rep['weighted_acceptance_length']:.2f} "
             f"OTPS={rep['otps']:.1f} "
             f"({rep['total_new_tokens']} tokens, "
             f"{rep['iterations']} iterations)")
@@ -88,20 +88,20 @@ def run(epochs=15, n_requests=16, max_new=24):
     mixed = serve([params(0.0 if i % 2 == 0 else 0.8, i)
                    for i in range(n_requests)])
     csv_rows.append({"discipline": "mixed greedy/T=0.8", "temperature": "",
-                     "acceptance_length": mixed["mean_acceptance_length"],
+                     "acceptance_length": mixed["weighted_acceptance_length"],
                      "otps": mixed["otps"],
                      "total_new_tokens": mixed["total_new_tokens"],
                      "iterations": mixed["iterations"]})
     lo = min(results[0.8]["otps"], results[0.0]["otps"])
     hi = max(results[0.8]["otps"], results[0.0]["otps"])
     row("table15/mixed", 1e6 / max(mixed["otps"], 1e-9),
-        f"AL={mixed['mean_acceptance_length']:.2f} "
+        f"AL={mixed['weighted_acceptance_length']:.2f} "
         f"OTPS={mixed['otps']:.1f} vs all-greedy {results[0.0]['otps']:.1f} "
         f"/ all-T0.8 {results[0.8]['otps']:.1f} "
         f"({'PASS' if mixed['otps'] > 0.5 * lo else 'FAIL'}: mixed batch "
         "must serve through the same step without collapsing)")
-    al_greedy = results[0.0]["mean_acceptance_length"]
-    al_hot = results[1.0]["mean_acceptance_length"]
+    al_greedy = results[0.0]["weighted_acceptance_length"]
+    al_hot = results[1.0]["weighted_acceptance_length"]
     row("table15/al_trend", al_greedy / max(al_hot, 1e-9),
         f"AL greedy/T=1.0 = {al_greedy:.2f}/{al_hot:.2f} — rejection "
         "sampling accepts fewer drafts as the warped target flattens")

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import DrafterConfig, ModelConfig
+from repro.core import spec_decode as SD
 from repro.core.masks import mtp_mask_predicate
 from repro.models import layers as L
 from repro.sharding.utils import shard_hint
@@ -307,8 +308,18 @@ def draft_block_inputs(dcfg, tcfg, params, token_next, taps_last, anchor_pos, K)
 
 def draft_parallel(dcfg: DrafterConfig, tcfg: ModelConfig, params: dict,
                    cache: dict, token_next: Array, taps_last: Array,
-                   anchor_pos: Array, K: int):
+                   anchor_pos: Array, K: int, policy=None):
     """P-EAGLE: one forward pass drafts K tokens (chain decoding).
+
+    ``policy`` — optional ``(keys (B,K,2), temperature (B,), top_k (B,),
+    top_p (B,))`` sampled-draft policy: rows with ``temperature > 0`` draw
+    each draft slot from the row-warped drafter distribution
+    (``warp_probs`` on the slot logits, one key per slot) instead of the
+    argmax; greedy rows stay bitwise on the argmax path. The K slots are
+    mask-token-conditioned in ONE forward, so the slot logits do not depend
+    on which draft tokens are chosen — sampling post-forward from
+    ``warp_probs(logits)`` IS sampling from the true proposal the verifier
+    must be handed as ``q``.
 
     Returns (draft_tokens (B,K), draft_logits (B,K,V), new cache)."""
     x, positions = draft_block_inputs(dcfg, tcfg, params, token_next,
@@ -316,18 +327,32 @@ def draft_parallel(dcfg: DrafterConfig, tcfg: ModelConfig, params: dict,
     x, ncache = _run_blocks(dcfg, params, x, positions=positions,
                             mask_fn=None, cache=cache, mode="draft")
     logits, _ = _head(dcfg, params, x)
-    return jnp.argmax(logits, axis=-1).astype(jnp.int32), logits, ncache
+    toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if policy is not None:
+        keys, temperature, top_k, top_p = policy
+        probs = SD.warp_probs(logits, temperature, top_k, top_p)
+        drawn = jax.vmap(jax.vmap(
+            lambda k, p: jax.random.categorical(k, jnp.log(p))))(keys, probs)
+        toks = jnp.where((temperature > 0)[:, None],
+                         drawn.astype(jnp.int32), toks)
+    return toks, logits, ncache
 
 
 def draft_ar(dcfg: DrafterConfig, tcfg: ModelConfig, params: dict,
              cache: dict, token_next: Array, taps_last: Array,
-             anchor_pos: Array, K: int):
+             anchor_pos: Array, K: int, policy=None):
     """AR EAGLE-3 baseline: K sequential single-position forwards; step i
-    feeds (token d_i, drafter hidden h_i) into step i+1."""
+    feeds (token d_i, drafter hidden h_i) into step i+1.
+
+    ``policy`` as in :func:`draft_parallel`, but sampling MUST happen
+    inside the scan: each drafted token is fed forward, so the slot-i
+    logits are conditioned on the slots actually drawn before it — only
+    in-scan draws make ``warp_probs(logits)`` the true per-slot proposal."""
     B = token_next.shape[0]
     fc = (taps_last.astype(params["fc"].dtype) @ params["fc"])  # (B, D)
 
-    def step(carry, i):
+    def step(carry, xs):
+        i, keys_i = xs
         cache, tok, hid = carry
         emb = embed_tokens(dcfg, params, tok[:, None])          # (B,1,D)
         x = jnp.concatenate([emb, hid[:, None]], axis=-1) @ params["fuse"]
@@ -335,9 +360,19 @@ def draft_ar(dcfg: DrafterConfig, tcfg: ModelConfig, params: dict,
         x, ncache = _run_blocks(dcfg, params, x, positions=positions,
                                 mask_fn=None, cache=cache, mode="extend")
         logits, h = _head(dcfg, params, x)
-        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        if keys_i is None:
+            nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        else:
+            nxt = SD.sample_token(keys_i, logits[:, 0], temperature, top_k,
+                                  top_p)
         return (ncache, nxt, h[:, 0]), (nxt, logits[:, 0])
 
+    if policy is None:
+        xs = (jnp.arange(K), None)
+        temperature = top_k = top_p = None
+    else:
+        keys, temperature, top_k, top_p = policy
+        xs = (jnp.arange(K), keys.swapaxes(0, 1))               # (K, B, 2)
     (cache, _, _), (toks, logits) = jax.lax.scan(
-        step, (cache, token_next, fc), jnp.arange(K))
+        step, (cache, token_next, fc), xs)
     return toks.swapaxes(0, 1), logits.swapaxes(0, 1), cache

@@ -103,9 +103,19 @@ def sample_token(keys: Array, logits: Array, temperature: Array,
 # ---------------------------------------------------------------------------
 
 def _rejection_verify_row(key: Array, draft_tokens: Array, draft_probs: Array,
-                          target_probs: Array) -> Tuple[Array, Array]:
+                          target_probs: Array,
+                          k_row: Array) -> Tuple[Array, Array]:
     """One row: draft_tokens (K,), draft_probs (K, V), target_probs
-    (K+1, V); see :func:`rejection_verify`."""
+    (K+1, V), k_row scalar int32 in [0, K]; see :func:`rejection_verify`.
+
+    ``k_row`` is the row's effective draft length (the adaptive-K max-K
+    mask): slots >= k_row are force-rejected, and the proposal mass at a
+    forced-rejection slot is zeroed so the resample there draws from the
+    FULL warped target — i.e. truncating speculation degrades to plain
+    sampling at that position, never to a biased residual. With
+    ``k_row == K`` every branch below is bitwise identical to the unmasked
+    verifier (same key splits, same uniform draws, same selects).
+    """
     K, V = draft_probs.shape
     ks = jax.random.split(key, 3)
     u = jax.random.uniform(ks[0], (K,))
@@ -113,16 +123,22 @@ def _rejection_verify_row(key: Array, draft_tokens: Array, draft_probs: Array,
     q_d = draft_probs[ar, draft_tokens]
     p_d = target_probs[ar, draft_tokens]
     # accept token i w.p. min(1, p/q): u < min(1, p/q) <=> u*q < p (u < 1
-    # always), with q == 0 handled exactly — no epsilon fudge
-    ok = u * q_d < p_d
+    # always), with q == 0 handled exactly — no epsilon fudge. Slots at or
+    # beyond k_row are force-rejected (max-K mask).
+    ok = (u * q_d < p_d) & (ar < k_row)
     accept_len = jnp.sum(jnp.cumprod(ok.astype(jnp.int32)))
 
     # residual distribution at the first rejected slot: norm(max(p - q, 0)),
     # renormalized explicitly — zero entries stay exactly zero (log 0 =
     # -inf, never drawn); a fully-zero residual (p == q bitwise, so
-    # rejection there has probability 0) falls back to the target row
+    # rejection there has probability 0) falls back to the target row.
+    # At a FORCED rejection (idx == k_row) no draft was really proposed, so
+    # q is zeroed: the residual is the full target row and the "resample"
+    # is an exact sample from p — the lossless bonus-token semantics.
     idx = jnp.minimum(accept_len, K - 1)
-    p_rej, q_rej = target_probs[idx], draft_probs[idx]
+    p_rej = target_probs[idx]
+    q_rej = jnp.where(idx < k_row, draft_probs[idx],
+                      jnp.zeros_like(draft_probs[idx]))
     resid = jnp.maximum(p_rej - q_rej, 0.0)
     mass = resid.sum()
     resid = jnp.where(mass > 0, resid / jnp.where(mass > 0, mass, 1.0), p_rej)
@@ -138,8 +154,9 @@ def _rejection_verify_row(key: Array, draft_tokens: Array, draft_probs: Array,
 
 
 def rejection_verify_rows(keys: Array, draft_tokens: Array,
-                          draft_probs: Array,
-                          target_probs: Array) -> Tuple[Array, Array]:
+                          draft_probs: Array, target_probs: Array,
+                          k_row: Optional[Array] = None
+                          ) -> Tuple[Array, Array]:
     """Lossless stochastic verification with PER-ROW keys (B, 2) uint32 —
     the serving path: each request's key is derived from its own
     ``SamplingParams.seed`` (serving/sampling.py), so a row's outcome is
@@ -150,24 +167,35 @@ def rejection_verify_rows(keys: Array, draft_tokens: Array,
     q_i(d_i)); on first rejection the replacement is sampled from
     norm(max(p - q, 0)); if all accepted, bonus ~ p_K.
 
+    ``k_row`` (B,) int32 is the optional per-row effective draft length
+    (adaptive K): slots >= k_row[b] are force-rejected with the proposal
+    mass zeroed there (see :func:`_rejection_verify_row`). ``None`` means
+    the full K for every row — bitwise identical to the pre-adaptive
+    verifier.
+
     Returns (accept_len (B,), committed (B, K+1)).
     """
+    if k_row is None:
+        k_row = jnp.full(draft_tokens.shape[:1], draft_tokens.shape[1],
+                         jnp.int32)
     return jax.vmap(_rejection_verify_row)(keys, draft_tokens, draft_probs,
-                                           target_probs)
+                                           target_probs, k_row)
 
 
 def rejection_verify(key: Array, draft_tokens: Array, draft_probs: Array,
-                     target_probs: Array) -> Tuple[Array, Array]:
+                     target_probs: Array,
+                     k_row: Optional[Array] = None) -> Tuple[Array, Array]:
     """Whole-batch convenience wrapper: split ``key`` into per-row keys and
     verify (see :func:`rejection_verify_rows`)."""
     B = draft_tokens.shape[0]
     return rejection_verify_rows(jax.random.split(key, B), draft_tokens,
-                                 draft_probs, target_probs)
+                                 draft_probs, target_probs, k_row)
 
 
 def mixed_verify(keys: Array, draft_tokens: Array, draft_probs: Array,
                  target_logits: Array, temperature: Array, top_k: Array,
-                 top_p: Array) -> Tuple[Array, Array]:
+                 top_p: Array,
+                 k_row: Optional[Array] = None) -> Tuple[Array, Array]:
     """Per-row mixed-policy verification inside ONE jitted step.
 
     ``temperature == 0`` rows take the exact greedy prefix-match path on the
@@ -177,17 +205,29 @@ def mixed_verify(keys: Array, draft_tokens: Array, draft_probs: Array,
 
     ``draft_probs`` (B, K, V) must be the distribution the drafts were
     ACTUALLY drawn from — that is what makes rejection sampling lossless.
-    This repo's drafters emit argmax drafts (a deterministic proposal), so
-    the engine passes a one-hot: acceptance then reduces to ``u < p(d)``
-    and the residual to ``norm(p masked at d)``, which keeps the committed
-    distribution exactly the warped target. A future drafter that samples
-    its drafts should pass its own warped distribution here instead
-    (``warp_probs`` applies identically to drafter logits).
+    For argmax drafts (a deterministic proposal) that is a one-hot:
+    acceptance then reduces to ``u < p(d)`` and the residual to
+    ``norm(p masked at d)``, which keeps the committed distribution exactly
+    the warped target. With ``EngineConfig.draft_sampling`` the engine
+    instead draws drafts from the row-warped DRAFTER distribution and
+    passes that distribution here (``warp_probs`` applies identically to
+    drafter logits) — higher overlap with the warped target, longer
+    acceptance.
+
+    ``k_row`` (B,) int32 optionally caps each row's effective draft length
+    (adaptive K). Greedy rows clip their matched prefix at k_row — the
+    correction token ``t_star[accept_len]`` is the target argmax at that
+    position, so a greedy stream's CONTENT is unchanged by any k_row
+    sequence (only commit pacing moves). Sampled rows force-reject slots
+    >= k_row losslessly (see :func:`_rejection_verify_row`).
 
     Returns (accept_len (B,), committed (B, K+1))."""
     acc_g, t_star = greedy_verify(draft_tokens, target_logits)
+    if k_row is not None:
+        acc_g = jnp.minimum(acc_g, k_row)
     p = warp_probs(target_logits, temperature, top_k, top_p)
-    acc_s, comm_s = rejection_verify_rows(keys, draft_tokens, draft_probs, p)
+    acc_s, comm_s = rejection_verify_rows(keys, draft_tokens, draft_probs, p,
+                                          k_row)
     is_greedy = temperature <= 0
     return (jnp.where(is_greedy, acc_g, acc_s),
             jnp.where(is_greedy[:, None], t_star, comm_s))
@@ -198,21 +238,35 @@ def mixed_verify(keys: Array, draft_tokens: Array, draft_probs: Array,
 # ---------------------------------------------------------------------------
 
 def update_acceptance_stats(stats: dict, accept_len: Array,
-                            active: Optional[Array] = None) -> dict:
+                            active: Optional[Array] = None,
+                            iters: Optional[Array] = None) -> dict:
     """Running mean of tokens committed per iteration (= accept_len + 1,
     the paper's acceptance length).
+
+    ``active`` masks out frozen/blank rows: an inactive row contributes
+    zero iterations and zero tokens. Callers with a partially idle batch
+    MUST pass it — with ``active is None`` every row of ``accept_len`` is
+    credited an iteration, which silently deflates the running mean that
+    the adaptive-K controller steers on.
+
+    ``iters`` (B,) optionally weights each row as that many iterations
+    (default 1): ``accept_len`` is then the row's total ACCEPTED drafts
+    over those iterations, so committed tokens are ``accept_len + iters``.
+    This is how the host-side controller folds multi-iteration harvest
+    deltas into the same running aggregate.
 
     Safe under an all-False ``active`` mask: the update contributes zero
     iterations and zero tokens, and the carried ``mean`` divides by
     ``max(iters, 1)`` — never by ``sum(active) == 0`` — so an idle batch
     cannot poison the running mean with NaN."""
-    n = accept_len.shape[0] if active is None else jnp.sum(active)
-    tok = accept_len + 1
+    w = jnp.ones(accept_len.shape, jnp.int32) if iters is None else iters
+    n = jnp.sum(w) if active is None else jnp.sum(jnp.where(active, w, 0))
+    tok = accept_len + w
     tok = tok if active is None else jnp.where(active, tok, 0)
-    iters = stats.get("iters", 0) + n
+    iters_tot = stats.get("iters", 0) + n
     tokens = stats.get("tokens", 0) + jnp.sum(tok)
-    return {"iters": iters, "tokens": tokens,
-            "mean": tokens / jnp.maximum(jnp.asarray(iters), 1)}
+    return {"iters": iters_tot, "tokens": tokens,
+            "mean": tokens / jnp.maximum(jnp.asarray(iters_tot), 1)}
 
 
 def acceptance_length(stats: dict) -> float:

@@ -100,6 +100,18 @@ def main():
     ap.add_argument("--no-preempt", action="store_true",
                     help="never evict a running slot on pool exhaustion; "
                          "slots stall until pages free up")
+    ap.add_argument("--adaptive-k", action="store_true",
+                    help="per-request dynamic draft length: an acceptance "
+                         "EMA per request sets k_row <= K via the jitted "
+                         "step's max-K mask (serving/speculation.py); easy "
+                         "rows speculate deep, hard rows stop burning "
+                         "verify FLOPs and page headroom")
+    ap.add_argument("--draft-sampling", action="store_true",
+                    help="sample drafts from the row-warped drafter "
+                         "distribution for temperature > 0 requests (the "
+                         "rejection proposal q becomes that distribution "
+                         "instead of the argmax one-hot); greedy requests "
+                         "are unchanged")
     ap.add_argument("--shard-model", type=int, default=0, metavar="N",
                     help="storage-shard weights + full-length KV over a 1-D "
                          "(model,) mesh of N devices (0 = single-device); "
@@ -145,7 +157,8 @@ def main():
                               pool_pages=args.pool_pages,
                               bucket_prefill=not args.no_bucket,
                               kv_growth=args.kv_growth,
-                              shard_model=args.shard_model > 0, mesh=mesh),
+                              shard_model=args.shard_model > 0, mesh=mesh,
+                              draft_sampling=args.draft_sampling),
                  args.batch)
     if mesh is not None:
         print(f"model-sharded over {mesh.shape['model']} devices "
@@ -188,7 +201,8 @@ def main():
     # synthesizes deterministic per-prompt stub frontend inputs (real
     # deployments attach actual vision/audio features via Request.extras)
     sched = Scheduler(eng, eos_id=args.eos_id, sync_every=args.sync_every,
-                      preempt=False if args.no_preempt else None)
+                      preempt=False if args.no_preempt else None,
+                      adaptive_k=args.adaptive_k)
     rep = None
     for _ in range(2):      # second run = warm, compile excluded
         rep = sched.serve([Request(p, max_new_tokens=b, arrival_time=a,
@@ -197,9 +211,13 @@ def main():
                                                   sps)])
     print(f"mode={args.mode} K={args.k} batch={args.batch} "
           f"requests={rep['n_requests']}: OTPS={rep['otps']:.1f} "
-          f"AL={rep['mean_acceptance_length']:.2f} "
+          f"AL={rep['weighted_acceptance_length']:.2f} "
           f"({rep['total_new_tokens']} tokens, {rep['iterations']} iterations,"
           f" mean latency {rep['mean_latency_s'] * 1e3:.0f} ms)")
+    if args.adaptive_k:
+        spec = rep["speculation"]
+        print(f"adaptive-K: mean_k={spec['mean_k']:.2f} "
+              f"(min {spec['min_k']} / max {spec['max_k']} of K={args.k})")
     if args.mean_gap > 0 or rep["preemptions"]:
         print(f"async: makespan={rep['makespan_vt']:.1f} vt  "
               f"latency p50/p99={rep['p50_latency_vt']:.1f}/"

@@ -3,6 +3,7 @@ from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import (ABORTED, FINISHED, LLMEngine, Request,
                                      Scheduler, serve_round_based)
+from repro.serving.speculation import SpeculationConfig, SpeculationController
 from repro.serving.streaming import (AsyncEngine, StreamHandle,
                                      virtual_twin_report)
 from repro.serving import cache_ops
@@ -10,5 +11,6 @@ from repro.serving.cache_ops import BlockAllocator
 
 __all__ = ["ABORTED", "AsyncEngine", "BlockAllocator", "Engine",
            "EngineConfig", "FINISHED", "LLMEngine", "PrefixCache", "Request",
-           "SamplingParams", "Scheduler", "StreamHandle",
-           "serve_round_based", "virtual_twin_report", "cache_ops"]
+           "SamplingParams", "Scheduler", "SpeculationConfig",
+           "SpeculationController", "StreamHandle", "serve_round_based",
+           "virtual_twin_report", "cache_ops"]

@@ -51,8 +51,8 @@ from repro.models import get_model
 from repro.serving import cache_ops
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import (SamplingParams, batch_sampling_state,
-                                    blank_sampling_state, sampling_state_sds,
-                                    step_keys)
+                                    blank_sampling_state, draft_keys,
+                                    sampling_state_sds, step_keys)
 from repro.sharding import rules as shard_rules
 from repro.sharding.utils import replicate_tree, serving_mesh
 
@@ -140,6 +140,14 @@ class EngineConfig:
     # Engine-default decoding policy; per-request SamplingParams override it
     # slot-by-slot through the scheduler. None = SamplingParams.greedy().
     sampling: Optional[SamplingParams] = None
+    # Warped-proposal drafting: rows with temperature > 0 SAMPLE their K
+    # drafts from the row-warped drafter distribution (one salted
+    # counter-based key per slot — sampling.draft_keys) instead of taking
+    # the drafter argmax, and verification receives that distribution as
+    # the rejection proposal q. Greedy rows stay bitwise on the argmax
+    # path. Off by default: the one-hot argmax proposal is the
+    # pre-adaptive behavior.
+    draft_sampling: bool = False
 
     def __post_init__(self):
         if self.greedy is not None:
@@ -352,7 +360,7 @@ class Engine:
                          in_shardings=(tp, dp, csh, rp, rp),
                          out_shardings=csh)
         self._sched_step = self._greedy_twins(
-            self._sched_step_impl, in_shardings=(tp, dp, csh, rp, rp),
+            self._sched_step_impl, in_shardings=(tp, dp, csh, rp, rp, rp),
             out_shardings=csh)
         self._admit = jj(self._admit_impl,
                          in_shardings=(csh, csh, rp, rp, rp),
@@ -365,7 +373,7 @@ class Engine:
             # admission/free/growth are then sharded-local data movement
             psh = self.paged_state_shardings
             self._paged_step = self._greedy_twins(
-                self._paged_step_impl, in_shardings=(tp, dp, psh, rp, rp),
+                self._paged_step_impl, in_shardings=(tp, dp, psh, rp, rp, rp),
                 out_shardings=psh)
             self._paged_admit = jj(self._paged_admit_impl,
                                    in_shardings=(psh, csh, rp, rp, rp, rp,
@@ -1242,15 +1250,23 @@ class Engine:
         return any(self._slot_sampled) or not self.ecfg.sampling.is_greedy
 
     def step(self, state: dict, active: Optional[Array] = None,
-             max_new: Optional[Array] = None) -> dict:
+             max_new: Optional[Array] = None,
+             k_row: Optional[Array] = None) -> dict:
         """One jitted speculative iteration. Without arguments this is the
         legacy whole-batch step; the scheduler passes ``active`` (B,) bool and
         per-slot ``max_new`` (B,) int32. The paged layout always routes
         through the gather→step→scatter wrapper. Host-side, the engine picks
         the mixed-policy or greedy-only trace of the step (``_mixed_policy``;
         output-identical, the greedy twin just skips the sampled lane's
-        warps and draws)."""
+        warps and draws).
+
+        ``k_row`` (B,) int32 is the adaptive-speculation max-K mask: each
+        row's effective draft length this iteration, in ``[0, K]``. It is a
+        TRACED argument of the same jitted step — varying it never
+        recompiles — and ``None`` (= full K everywhere) is bitwise
+        identical to the pre-adaptive step."""
         g = not self._mixed_policy()              # twin key: greedy_only
+        B = state["tokens"].shape[0]
         if self.paged:
             if "block_table" not in state:
                 raise ValueError(
@@ -1258,36 +1274,40 @@ class Engine:
                     "prefill_into_slot); whole-batch prefill states are "
                     "contiguous-only — use a kv_layout='contiguous' engine "
                     "for whole-batch loops like serve_round_based")
-            B = state["tokens"].shape[0]
             if active is None:
                 active = jnp.ones((B,), bool)
             if max_new is None:
                 max_new = jnp.full((B,), self.ecfg.max_new_tokens, jnp.int32)
+            if k_row is None:
+                k_row = jnp.full((B,), self.ecfg.K, jnp.int32)
             return self._paged_step[g](self.tparams, self.dparams, state,
                                        jnp.asarray(active),
-                                       jnp.asarray(max_new, jnp.int32))
-        if active is None and max_new is None:
+                                       jnp.asarray(max_new, jnp.int32),
+                                       jnp.asarray(k_row, jnp.int32))
+        if active is None and max_new is None and k_row is None:
             return self._step[g](self.tparams, self.dparams, state)
-        B = state["tokens"].shape[0]
         if active is None:
             active = jnp.ones((B,), bool)
         if max_new is None:
             max_new = jnp.full((B,), self.ecfg.max_new_tokens, jnp.int32)
+        if k_row is None:
+            k_row = jnp.full((B,), self.ecfg.K, jnp.int32)
         return self._sched_step[g](self.tparams, self.dparams, state,
                                    jnp.asarray(active),
-                                   jnp.asarray(max_new, jnp.int32))
+                                   jnp.asarray(max_new, jnp.int32),
+                                   jnp.asarray(k_row, jnp.int32))
 
     def _sched_step_impl(self, tparams, dparams, state, active, max_new,
-                         greedy_only=False):
+                         k_row, greedy_only=False):
         tparams, dparams = self._rep(tparams), self._rep(dparams)
         out = speculative_step(self.model, self.tcfg, self.dcfg, self.ecfg,
                                tparams, dparams, self._rep(state),
                                active_mask=active, max_new=max_new,
-                               greedy_only=greedy_only)
+                               k_row=k_row, greedy_only=greedy_only)
         return self._rep(out)
 
     def _paged_step_impl(self, tparams, dparams, state, active, max_new,
-                         greedy_only=False):
+                         k_row, greedy_only=False):
         """Paged twin of _sched_step_impl: reassemble each slot's pages into
         the contiguous per-slot view the step consumes (cache_ops.gather),
         run the identical speculative iteration, scatter the updated view
@@ -1309,7 +1329,7 @@ class Engine:
         view = speculative_step(self.model, self.tcfg, self.dcfg, self.ecfg,
                                 tparams, dparams, view,
                                 active_mask=active, max_new=max_new,
-                                greedy_only=greedy_only)
+                                k_row=k_row, greedy_only=greedy_only)
         view = self._rep(view)
         core = cache_ops.scatter_state(core, view, table, self.pspec)
         core["block_table"] = table
@@ -1376,6 +1396,7 @@ def speculative_step(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
                  ecfg: EngineConfig, tparams, dparams, state,
                  active_mask: Optional[Array] = None,
                  max_new: Optional[Array] = None,
+                 k_row: Optional[Array] = None,
                  greedy_only: bool = False):
     """One speculative iteration: draft K → verify K+1 → accept → commit.
 
@@ -1399,6 +1420,19 @@ def speculative_step(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
     depends only on its own ``(seed, committed prefix)``, never on batch
     composition, slot index, or an engine-global RNG.
 
+    With ``ecfg.draft_sampling`` the sampled rows' K drafts are themselves
+    DRAWN from the row-warped drafter distribution (keys: a DRAFT_SALT-
+    separated fold_in stream at the same position counter — sampling.py)
+    and the rejection proposal q is that distribution instead of the argmax
+    one-hot; greedy rows keep the argmax drafts bitwise.
+
+    ``k_row`` (B,) int32 caps each row's effective draft length this
+    iteration (adaptive K, ``None`` = full K): a max-K mask inside
+    verification — slots past k_row are force-rejected losslessly — so the
+    scheduler's controller varies speculation depth per row with zero
+    retraces. The drafter still emits K slots; the cap costs nothing and
+    changes nothing when ``k_row == K``.
+
     ``greedy_only`` (STATIC) traces the verification without the sampled
     lane at all — no warping, no categorical draws — restoring the
     pre-SamplingParams per-step cost. The Engine selects this trace
@@ -1411,14 +1445,21 @@ def speculative_step(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
     tok_next = jnp.take_along_axis(state["tokens"], c[:, None], axis=1)[:, 0]
     samp = state["sampling"]
 
+    # warped-proposal draft policy: only the mixed trace draws (the greedy
+    # twin is selected precisely when no admitted row samples)
+    policy = None
+    if ecfg.draft_sampling and not greedy_only and K > 0:
+        policy = (draft_keys(samp, c + 1, K), samp["temperature"],
+                  samp["top_k"], samp["top_p"])
+
     if ecfg.drafter_mode == "parallel":
         drafts, dlogits, dcache = D.draft_parallel(
             dcfg, tcfg, dparams, state["dcache"], tok_next,
-            state["taps_last"], c - 1, K)
+            state["taps_last"], c - 1, K, policy=policy)
     elif ecfg.drafter_mode == "ar":
         drafts, dlogits, dcache = D.draft_ar(
             dcfg, tcfg, dparams, state["dcache"], tok_next,
-            state["taps_last"], c - 1, K)
+            state["taps_last"], c - 1, K, policy=policy)
     else:
         drafts = jnp.zeros((B, 0), jnp.int32)
         dlogits, dcache = None, None
@@ -1440,17 +1481,35 @@ def speculative_step(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
                                      samp["top_k"], samp["top_p"])[:, None]
     elif greedy_only:
         accept_len, t_star = SD.greedy_verify(drafts, tout.logits)
+        if k_row is not None:
+            # clip the matched prefix at the row's draft budget — the
+            # correction token t_star[accept_len] is the target argmax at
+            # that position, so the stream content is unchanged
+            accept_len = jnp.minimum(accept_len, k_row)
     else:
-        # drafts are the drafter's argmax — a DETERMINISTIC proposal, so
-        # the distribution they were drawn from is a one-hot, and lossless
-        # rejection reduces to accept-with-p(d) / residual p-masked-at-d
-        # (passing the drafter softmax here would over-accept the drafter's
-        # argmax and bias the committed distribution)
-        q = jax.nn.one_hot(drafts, tout.logits.shape[-1],
-                           dtype=tout.logits.dtype)
+        if policy is not None:
+            # sampled rows drew their drafts from the row-warped drafter
+            # distribution — the proposal q MUST be that same distribution
+            # for rejection sampling to stay lossless. Greedy rows keep
+            # the one-hot of their argmax drafts (their sampled-lane
+            # output is discarded by mixed_verify's where-select anyway).
+            q = jnp.where((samp["temperature"] > 0)[:, None, None],
+                          SD.warp_probs(dlogits, samp["temperature"],
+                                        samp["top_k"], samp["top_p"]),
+                          jax.nn.one_hot(drafts, tout.logits.shape[-1],
+                                         dtype=tout.logits.dtype))
+        else:
+            # drafts are the drafter's argmax — a DETERMINISTIC proposal,
+            # so the distribution they were drawn from is a one-hot, and
+            # lossless rejection reduces to accept-with-p(d) / residual
+            # p-masked-at-d (passing the drafter softmax here would
+            # over-accept the drafter's argmax and bias the committed
+            # distribution)
+            q = jax.nn.one_hot(drafts, tout.logits.shape[-1],
+                               dtype=tout.logits.dtype)
         accept_len, t_star = SD.mixed_verify(
             step_keys(samp, c + 1), drafts, q, tout.logits,
-            samp["temperature"], samp["top_k"], samp["top_p"])
+            samp["temperature"], samp["top_k"], samp["top_p"], k_row)
 
     budget = jnp.asarray(ecfg.max_new_tokens, jnp.int32) \
         if max_new is None else max_new

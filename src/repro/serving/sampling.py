@@ -149,3 +149,25 @@ def step_keys(samp: dict, pos: Array) -> Array:
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32),
                            samp["key"].shape[:1])
     return jax.vmap(jax.random.fold_in)(samp["key"], pos)
+
+
+# Salt separating the DRAFT-sampling key stream from the verify stream at
+# the same position counter. Verification consumes ``step_keys(samp, pos)``
+# directly; drafting at the same committed prefix folds this constant in
+# first, so the two streams never alias while both remain pure functions of
+# ``(seed, committed prefix)``.
+DRAFT_SALT = 0x5EED_D12A
+
+
+def draft_keys(samp: dict, pos: Array, K: int) -> Array:
+    """(B, K, 2) uint32 — per-row, per-draft-slot keys for sampling K draft
+    tokens at committed prefix position ``pos``.
+
+    Derivation: ``split(fold_in(step_keys(samp, pos), DRAFT_SALT), K)``.
+    Like the verify keys, the result depends only on ``(seed, committed
+    prefix)`` — never on batch composition, slot index, layout or mesh —
+    which is what keeps warped-proposal drafting bitwise reproducible
+    across all of those axes and across preempt/resume."""
+    salted = jax.vmap(
+        lambda k: jax.random.fold_in(k, DRAFT_SALT))(step_keys(samp, pos))
+    return jax.vmap(lambda k: jax.random.split(k, K))(salted)

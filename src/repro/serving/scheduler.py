@@ -104,6 +104,7 @@ import numpy as np
 from repro.models import make_extras
 from repro.serving.engine import Engine
 from repro.serving.sampling import SamplingParams
+from repro.serving.speculation import SpeculationConfig, SpeculationController
 
 QUEUED = "queued"
 PREFILLING = "prefilling"
@@ -213,12 +214,26 @@ class Scheduler:
     (``Engine.prefill_into_slot(resume=True)`` restarts verification at the
     exact step boundary the eviction stopped at). ``preempt=False`` stalls
     slots on pool exhaustion instead.
+
+    ``adaptive_k`` — per-request dynamic draft length
+    (serving/speculation.py): ``True`` enables the
+    :class:`SpeculationController` with default knobs, a
+    :class:`SpeculationConfig` enables it with those knobs, ``None``/
+    ``False`` keeps the fixed ``EngineConfig.K`` (bitwise the
+    pre-controller scheduler). When enabled, each request's acceptance EMA
+    — keyed by rid, surviving preemption — sets its ``k_row`` at admission
+    and at every harvest, and incremental page growth reserves the
+    per-row ``k_row + 1`` commit stride instead of the worst-case
+    ``K + 1`` (the pool-pressure win). Streams are unchanged for greedy
+    requests and stay bitwise deterministic for sampled ones: ``k_row``
+    is a pure function of the request's own committed stream.
     """
 
     def __init__(self, engine: Engine, eos_id: Optional[int] = None,
                  free_on_finish: bool = True, sync_every: int = 1,
                  iter_cost: float = 1.0, prefill_cost: float = 1.0,
-                 preempt: Optional[bool] = None):
+                 preempt: Optional[bool] = None,
+                 adaptive_k: Any = None):
         self.engine = engine
         self.eos_id = eos_id
         self.free_on_finish = free_on_finish
@@ -226,6 +241,14 @@ class Scheduler:
         self.iter_cost = float(iter_cost)
         self.prefill_cost = float(prefill_cost)
         self.preempt = True if preempt is None else bool(preempt)
+        if adaptive_k is None or adaptive_k is False:
+            self.spec: Optional[SpeculationController] = None
+        elif isinstance(adaptive_k, SpeculationController):
+            self.spec = adaptive_k
+        else:
+            cfg = adaptive_k if isinstance(adaptive_k, SpeculationConfig) \
+                else None
+            self.spec = SpeculationController(engine.ecfg.K, cfg)
         # session state (created by _begin_session; one live session per
         # Scheduler — serve() and a streaming.AsyncEngine each own theirs)
         self._wall_t0: Optional[float] = None
@@ -256,6 +279,9 @@ class Scheduler:
         self._state = eng.serve_state()
         self._active = np.zeros((B,), bool)
         self._max_new = np.zeros((B,), np.int32)
+        # per-slot effective draft length (adaptive-K max-K mask); full K
+        # when the controller is off — bitwise the pre-adaptive step
+        self._k_row = np.full((B,), eng.ecfg.K, np.int32)
         self._slot_req: List[Optional[Request]] = [None] * B
         self._waiting: List[Request] = []     # arrived, sorted by _prio
         self._finished: List[Request] = []    # completed AND aborted
@@ -352,6 +378,8 @@ class Scheduler:
         self._active[s] = False
         self._slot_req[s] = None
         self._finished.append(req)
+        if self.spec is not None:
+            self.spec.finish(req.rid)
         self._event("finish", req.rid)
         # paged engines MUST free (pages return to the pool); contiguous
         # freeing is cosmetic and stays opt-out
@@ -381,6 +409,8 @@ class Scheduler:
         req.t_finish = time.perf_counter()
         req.vt_finish = self._clock
         self._finished.append(req)
+        if self.spec is not None:
+            self.spec.finish(req.rid)
         self._event("abort", req.rid)
         return True
 
@@ -514,6 +544,10 @@ class Scheduler:
         self._slot_req[s] = req
         self._active[s] = True
         self._max_new[s] = remaining
+        if self.spec is not None:
+            # rid-keyed: a resume continues from the acceptance state the
+            # stream had at eviction, a fresh rid starts optimistic
+            self._k_row[s] = self.spec.k_for(req.rid)
         done = self._clip_and_check_done(req)
         self._flush(req)
         if done:                         # EOS at the very first token
@@ -564,9 +598,18 @@ class Scheduler:
                        + req.max_new_tokens + eng.ecfg.K + 1)
                 # a step at position c writes KV c..c+stride-1 and moves
                 # c by at most stride, so sync_every steps need length
-                # last + sync_every*stride, exactly
-                target = min(req._prev_last
-                             + self.sync_every * eng.commit_stride, cap)
+                # last + sync_every*stride, exactly. Under adaptive K the
+                # row's stride is k_row + 1, not the worst-case K + 1 —
+                # a hard row reserves (and can be preempted for) fewer
+                # pages. Writes past the row's allocation are dropped by
+                # scatter and equivalent to commit-invalidated entries,
+                # so the shorter reservation stays bitwise lossless.
+                if self.spec is not None \
+                        and eng.ecfg.drafter_mode != "none":
+                    stride = int(self._k_row[s]) + 1
+                else:
+                    stride = eng.commit_stride
+                target = min(req._prev_last + self.sync_every * stride, cap)
                 self._state, ok = eng.ensure_capacity(self._state, int(s),
                                                       target)
                 while not ok and self.preempt:
@@ -592,8 +635,9 @@ class Scheduler:
         regardless)."""
         eng = self.engine
         act_dev, mn_dev = jnp.asarray(run), jnp.asarray(self._max_new)
+        kr_dev = jnp.asarray(self._k_row)
         for _ in range(self.sync_every):
-            self._state = eng.step(self._state, act_dev, mn_dev)
+            self._state = eng.step(self._state, act_dev, mn_dev, kr_dev)
             self._n_iters += 1
             self._advance(self.iter_cost)
 
@@ -613,6 +657,7 @@ class Scheduler:
             req = self._slot_req[s]
             if req is None or not self._active[s]:
                 continue
+            prev_iters, prev_comm = req.iters, req._committed
             req.iters = req._iters_base + int(slot_iters[s])
             if new_count[s] > req._prev_new:
                 lo, hi = req._prev_last + 1, last[s] + 1
@@ -622,6 +667,16 @@ class Scheduler:
                 req._committed += int(new_count[s]) - req._prev_new
                 req._prev_new = int(new_count[s])
                 req._prev_last = int(last[s])
+            if self.spec is not None:
+                # fold THIS request's decode delta (committed tokens over
+                # engine iterations since the last sync) into its
+                # acceptance EMA and refresh the slot's draft length;
+                # zero-iteration windows (frozen rows) carry no signal
+                d_it = req.iters - prev_iters
+                if d_it > 0:
+                    self.spec.observe(req.rid, req._committed - prev_comm,
+                                      d_it)
+                    self._k_row[s] = self.spec.k_for(req.rid)
             done = self._clip_and_check_done(req)
             self._flush(req)
             if done:
@@ -721,12 +776,23 @@ class Scheduler:
             "wait_vt": (r.vt_admit - r.arrival_time
                         if r.vt_admit is not None else float("nan")),
             "latency_vt": r.vt_finish - r.arrival_time,
+            **({"k_final":
+                self.spec.request_report(r.rid)["k_final"]}
+               if self.spec is not None else {}),
         } for r in sorted(finished, key=lambda r: r.rid)]
         total = sum(r["n_new"] for r in results)
         done = [r for r in results if not r["aborted"]]
         lat_vt = [r["latency_vt"] for r in done] or [0.0]
         wait_vt = [r["wait_vt"] for r in done
                    if not np.isnan(r["wait_vt"])] or [0.0]
+        # iteration-WEIGHTED acceptance length: total decode-committed
+        # tokens over total decode iterations (completed requests). The
+        # per-request mean stays alongside, but a 1-iteration straggler
+        # must not weigh the same as a 500-iteration stream — benchmarks
+        # report this aggregate.
+        done_reqs = [r for r in finished if r.status == FINISHED]
+        dec_tok = sum(r._committed - r._prefills for r in done_reqs)
+        dec_it = sum(r.iters for r in done_reqs)
         return {
             "results": results,
             "n_requests": len(results),
@@ -736,6 +802,9 @@ class Scheduler:
             "otps": total / max(wall, 1e-9),
             "mean_acceptance_length": float(np.mean(
                 [r["acceptance_length"] for r in done])) if done else 0.0,
+            "weighted_acceptance_length": dec_tok / max(dec_it, 1),
+            **({"speculation": self.spec.report()}
+               if self.spec is not None else {}),
             "mean_latency_s": float(np.mean(
                 [r["latency_s"] for r in done])) if done else 0.0,
             # deterministic-clock latency profile + churn trace

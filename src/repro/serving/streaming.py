@@ -110,8 +110,10 @@ class AsyncEngine:
     Args:
       engine: the (typically paged) serving Engine. Exclusive: don't drive
         the same Engine from ``Scheduler.serve`` while a session is open.
-      eos_id / sync_every / preempt / free_on_finish: forwarded to the
-        underlying Scheduler (same semantics as the batch driver).
+      eos_id / sync_every / preempt / free_on_finish / adaptive_k:
+        forwarded to the underlying Scheduler (same semantics as the
+        batch driver; ``adaptive_k`` enables the per-request dynamic-K
+        speculation controller, serving/speculation.py).
       max_pending: admission-ticket bound — submitted-but-unfinished
         requests beyond this block in ``submit()`` until something
         finishes or aborts (default ``4 * engine.batch``).
@@ -130,11 +132,13 @@ class AsyncEngine:
     def __init__(self, engine: Engine, eos_id: Optional[int] = None,
                  sync_every: int = 1, preempt: Optional[bool] = None,
                  free_on_finish: bool = True,
-                 max_pending: Optional[int] = None):
+                 max_pending: Optional[int] = None,
+                 adaptive_k: Any = None):
         self.engine = engine
         self.scheduler = Scheduler(engine, eos_id=eos_id,
                                    free_on_finish=free_on_finish,
-                                   sync_every=sync_every, preempt=preempt)
+                                   sync_every=sync_every, preempt=preempt,
+                                   adaptive_k=adaptive_k)
         self.max_pending = (int(max_pending) if max_pending
                             else 4 * engine.batch)
         if self.max_pending < 1:
@@ -268,10 +272,21 @@ class AsyncEngine:
         if self._task is None:
             raise RuntimeError("AsyncEngine not started")
         completed = [r for r in sched._finished if r.status == FINISHED]
+        # wait list and filter use the SAME clock: the list reads the wall
+        # stamps (t_admit - t_submit), so never-admitted requests are
+        # screened by the wall stamp too (t_admit == 0.0 means the request
+        # finished/aborted without ever being admitted — mixing in the
+        # virtual vt_admit here would conflate the two clocks PR 7 split)
         waits = sorted(r.t_admit - r.t_submit for r in completed
-                       if r.vt_admit is not None)
-        pct = (lambda p: waits[min(int(p / 100 * len(waits)),
-                                   len(waits) - 1)]) if waits else None
+                       if r.t_admit > 0.0)
+
+        def pct(p: float) -> float:
+            # guarded on the DATA, not on the callable: zero completed
+            # requests yield zeroed percentiles, never an IndexError
+            if not waits:
+                return 0.0
+            return waits[min(int(p / 100 * len(waits)), len(waits) - 1)]
+
         pool_total = eng.pool_pages if eng.paged else 0
         pool_free = eng.allocator.n_free if eng.paged else 0
         return {
@@ -287,8 +302,8 @@ class AsyncEngine:
             "finished": len(completed),
             "aborted": len(sched._finished) - len(completed),
             "preemptions": sched._n_preempt,
-            "p50_wait_s": pct(50) if pct else 0.0,
-            "p99_wait_s": pct(99) if pct else 0.0,
+            "p50_wait_s": pct(50),
+            "p99_wait_s": pct(99),
             "uptime_s": time.perf_counter() - sched._t_start,
         }
 

@@ -1,0 +1,471 @@
+"""Adaptive speculation controller + sampled-draft proposals: the
+acceptance pins of the adaptive-K / warped-proposal PR.
+
+What must hold with ``adaptive_k`` and/or ``draft_sampling`` enabled:
+
+- **greedy losslessness**: greedy rows emit bitwise what the fixed-K
+  pre-controller engine emits — the max-K mask only changes *pacing*
+  (which iteration a token commits on), never content, because the
+  greedy path recovers ``t_star[accept_len]`` = target argmax at every
+  depth;
+- **per-request determinism**: a seeded sampled request's stream (with
+  sampled drafts drawn from the warped drafter distribution) is a pure
+  function of ``(seed, prompt)`` — invariant to batch composition, KV
+  layout, mesh size, and preempt/resume, because the draft keys are
+  ``fold_in``-derived counters over the committed prefix on a salted
+  stream disjoint from the verify keys;
+- **streamed ≡ virtual twin**: the wall-clock AsyncEngine with the
+  controller on yields exactly the virtual-clock Scheduler's streams,
+  because the controller is rid-keyed and fed only by the request's own
+  harvest deltas — wall pacing never leaks into ``k_row`` decisions;
+- **one trace per layout**: ``k_row`` is a traced ``(B,)`` argument of
+  the jitted step, so per-row depth changes never recompile (pinned via
+  the jit cache size);
+- the metrics/health bugfixes ride along: ``health()`` with zero
+  completed / all-aborted sessions, and iteration-weighted
+  ``update_acceptance_stats`` under a partially idle batch.
+"""
+import asyncio
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import DrafterConfig, get_config
+from repro.core import drafter as D
+from repro.core import spec_decode as SD
+from repro.models import get_model
+from repro.serving import (AsyncEngine, Engine, EngineConfig, Request,
+                           SamplingParams, Scheduler, SpeculationConfig,
+                           SpeculationController, virtual_twin_report)
+from repro.serving.sampling import draft_keys
+from repro.sharding.utils import serving_mesh
+
+from conftest import require_devices  # noqa: E402  (tests dir on sys.path)
+
+KEY = jax.random.PRNGKey(29)
+
+
+@lru_cache(maxsize=None)
+def _setup():
+    tcfg = get_config("qwen2-1.5b").reduced()
+    m = get_model(tcfg)
+    tparams = m.init(KEY)
+    dcfg = DrafterConfig(n_layers=1, k_infer=2).resolve(tcfg)
+    dparams = D.init_params(dcfg, tcfg, jax.random.fold_in(KEY, 1))
+    return tcfg, dcfg, tparams, dparams
+
+
+@lru_cache(maxsize=None)
+def get_engine(kv_layout="paged", batch=2, shard=0, pool_pages=0,
+               sampled_drafts=True, drafter_mode="parallel"):
+    tcfg, dcfg, tparams, dparams = _setup()
+    return Engine(tcfg, dcfg, tparams, dparams,
+                  EngineConfig(K=2, max_new_tokens=8,
+                               drafter_mode=drafter_mode, max_len=64,
+                               kv_layout=kv_layout, page_size=8,
+                               pool_pages=pool_pages,
+                               draft_sampling=sampled_drafts,
+                               shard_model=shard > 0,
+                               mesh=serving_mesh(shard) if shard else None),
+                  batch)
+
+
+def _prompts(n, seed=0, lo=4, hi=10):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, 200, size=int(rng.integers(lo, hi))
+                         ).astype(np.int32) for _ in range(n)]
+
+
+def run(coro, timeout=600):
+    return asyncio.run(asyncio.wait_for(coro, timeout))
+
+
+SAMPLED = SamplingParams(temperature=0.8, top_k=40, top_p=0.95, seed=1234)
+
+
+# ---------------------------------------------------------------------------
+# units: k_row mask in the verifier
+# ---------------------------------------------------------------------------
+
+def _verify_inputs(B=3, K=4, V=16, seed=5):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    drafts = jax.random.randint(ks[0], (B, K), 0, V, jnp.int32)
+    dlogits = jax.random.normal(ks[1], (B, K, V))
+    tlogits = jax.random.normal(ks[2], (B, K + 1, V))
+    temperature = jnp.asarray([0.0, 0.8, 1.2], jnp.float32)
+    top_k = jnp.zeros((B,), jnp.int32)
+    top_p = jnp.ones((B,), jnp.float32)
+    q = SD.warp_probs(dlogits, jnp.maximum(temperature, 1e-3), top_k, top_p)
+    keys = jax.random.split(ks[3], B)
+    return keys, drafts, q, tlogits, temperature, top_k, top_p
+
+
+def test_k_row_full_depth_is_bitwise_identity():
+    """``k_row = K`` must be the exact unmasked verifier — the controller
+    in its optimistic state changes nothing."""
+    keys, drafts, q, tl, t, tk, tp = _verify_inputs()
+    B, K = drafts.shape
+    a0, t0 = SD.mixed_verify(keys, drafts, q, tl, t, tk, tp)
+    a1, t1 = SD.mixed_verify(keys, drafts, q, tl, t, tk, tp,
+                             jnp.full((B,), K, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(a0), np.asarray(a1))
+    np.testing.assert_array_equal(np.asarray(t0), np.asarray(t1))
+
+
+def test_k_row_caps_accept_len_per_row():
+    """Rows are force-rejected at their own ``k_row``: accept_len never
+    exceeds it, and rows at full depth are untouched by neighbors'
+    masks (per-row independence of the vmap)."""
+    keys, drafts, q, tl, t, tk, tp = _verify_inputs(seed=11)
+    B, K = drafts.shape
+    full, _ = SD.mixed_verify(keys, drafts, q, tl, t, tk, tp)
+    k_row = jnp.asarray([0, 1, K], jnp.int32)
+    capped, _ = SD.mixed_verify(keys, drafts, q, tl, t, tk, tp, k_row)
+    assert (np.asarray(capped) <= np.asarray(k_row)).all()
+    assert int(capped[0]) == 0
+    assert int(capped[2]) == int(full[2])   # unmasked row unaffected
+
+
+def test_k_row_forced_rejection_is_lossless():
+    """With the draft masked out at the forced-rejection slot the resample
+    must draw from the FULL target distribution: q is zeroed there, so the
+    residual norm(max(p - 0, 0)) == p exactly. Empirically the committed
+    token at a ``k_row = 0`` slot matches p."""
+    V, N = 8, 30_000
+    key = jax.random.PRNGKey(7)
+    p = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (V,)))
+    q = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 2), (1, V)))
+    d = int(jnp.argmax(q[0]))
+
+    def one(k):
+        _, committed = SD.rejection_verify(
+            k, jnp.asarray([[d]], jnp.int32), q[None],
+            jnp.stack([p, p])[None], k_row=jnp.zeros((1,), jnp.int32))
+        return committed[0, 0]
+
+    toks = jax.vmap(one)(jax.random.split(key, N))
+    emp = np.bincount(np.asarray(toks), minlength=V) / N
+    np.testing.assert_allclose(emp, np.asarray(p), atol=0.015)
+
+
+def test_draft_keys_disjoint_from_verify_keys():
+    """The sampled-draft key stream is salted off the verify stream: same
+    (seed, position) must never reuse a verify key for a draft draw, and
+    the draft keys are pure counters (batch-size independent)."""
+    base = jax.random.PRNGKey(3)
+    samp = {"key": jnp.tile(base[None, :], (2, 1)),
+            "temperature": jnp.asarray([0.8, 0.8], jnp.float32),
+            "top_k": jnp.zeros((2,), jnp.int32),
+            "top_p": jnp.ones((2,), jnp.float32)}
+    pos = jnp.asarray([5, 9], jnp.int32)
+    from repro.serving.sampling import step_keys
+    vk = np.asarray(step_keys(samp, pos))
+    dk = np.asarray(draft_keys(samp, pos, K=3))
+    assert dk.shape == (2, 3) + vk.shape[1:]
+    flat = {tuple(k) for k in dk.reshape(-1, dk.shape[-1])}
+    assert not ({tuple(k) for k in vk} & flat), "draft key == verify key"
+    # counters: row 0 of a size-2 batch == row 0 of a size-1 batch
+    solo = {k: v[:1] for k, v in samp.items()}
+    np.testing.assert_array_equal(
+        np.asarray(draft_keys(solo, pos[:1], K=3))[0], dk[0])
+
+
+# ---------------------------------------------------------------------------
+# units: iteration-weighted acceptance stats (satellite 3)
+# ---------------------------------------------------------------------------
+
+def test_acceptance_stats_partially_idle_weighted():
+    """Regression for the stats-deflation bug: idle rows contribute
+    NOTHING (no iterations, no tokens), and the ``iters`` weights let a
+    multi-iteration harvest delta fold in as its true iteration count."""
+    # two active rows (3 and 2 iters), one idle row that must be ignored
+    s = SD.update_acceptance_stats(
+        {}, jnp.asarray([4, 1, 7]),              # accepted drafts over window
+        active=jnp.asarray([True, True, False]),
+        iters=jnp.asarray([3, 2, 5]))
+    assert int(s["iters"]) == 5                  # 3 + 2, idle row excluded
+    assert int(s["tokens"]) == (4 + 3) + (1 + 2)  # AL*it = drafts + iters
+    np.testing.assert_allclose(float(s["mean"]), 10 / 5)
+    # folding another delta accumulates; all-idle folds are no-ops
+    s2 = SD.update_acceptance_stats(
+        s, jnp.asarray([0, 0, 0]),
+        active=jnp.asarray([False, False, False]),
+        iters=jnp.asarray([9, 9, 9]))
+    assert (int(s2["iters"]), int(s2["tokens"])) == (5, 10)
+    assert np.isfinite(float(s2["mean"]))
+
+
+# ---------------------------------------------------------------------------
+# units: controller policy + state machine
+# ---------------------------------------------------------------------------
+
+def test_controller_policy_converges_and_recovers():
+    K = 5
+    c = SpeculationController(K)
+    assert c.k_for(1) == K                       # optimistic admission
+    for _ in range(12):                          # AL=1: nothing accepted
+        c.observe(1, d_tok=2, d_it=2)
+    assert c.k_for(1) == 1                       # floor (k_min=1)
+    for _ in range(12):                          # AL=K+1: everything lands
+        c.observe(1, d_tok=2 * (K + 1), d_it=2)
+    assert c.k_for(1) == K                       # recovered to full depth
+    c.observe(1, d_tok=0, d_it=0)                # idle delta is a no-op
+    rep = c.request_report(1)
+    assert rep["observed_iters"] == 48 and rep["k_final"] == K
+    c.finish(1)
+    c.finish(1)                                  # double-finish is a no-op
+    agg = c.report()
+    assert agg["requests"] == 1 and agg["max_k"] == K
+
+
+def test_controller_state_is_rid_keyed_not_slot_keyed():
+    """Preemption hands a request a NEW slot; the controller must resume
+    the same EMA trajectory regardless — interleaving another rid's
+    observations must not perturb it."""
+    a = SpeculationController(4)
+    b = SpeculationController(4)
+    deltas = [(3, 2), (2, 2), (6, 2), (2, 1)]
+    for d_tok, d_it in deltas:
+        a.observe(7, d_tok, d_it)
+    for i, (d_tok, d_it) in enumerate(deltas):
+        b.observe(7, d_tok, d_it)
+        b.observe(1000 + i, 2, 1)                # noisy neighbor
+    assert a.k_for(7) == b.k_for(7)
+    assert a.request_report(7) == b.request_report(7)
+
+
+def test_speculation_config_validation():
+    SpeculationConfig(k_min=1, ema_decay=0.5, headroom=0)
+    for bad in [dict(k_min=-1), dict(ema_decay=0.0), dict(ema_decay=1.0),
+                dict(headroom=-1)]:
+        with pytest.raises(ValueError):
+            SpeculationConfig(**bad)
+
+
+# ---------------------------------------------------------------------------
+# serving invariants with the controller + sampled drafts on
+# ---------------------------------------------------------------------------
+
+def _mixed_requests(prompts, budget=7):
+    sps = [None, SAMPLED, None,
+           SamplingParams(temperature=1.0, top_p=0.9, seed=77)]
+    return [Request(p, max_new_tokens=budget, sampling=sp)
+            for p, sp in zip(prompts, sps[:len(prompts)])]
+
+
+def test_greedy_rows_bitwise_with_controller_and_sampled_drafts():
+    """THE losslessness pin: greedy rows of a mixed batch served with
+    ``adaptive_k=True`` on a ``draft_sampling`` engine emit exactly what a
+    plain fixed-K engine without the controller emits."""
+    base = get_engine(sampled_drafts=False)
+    eng = get_engine(sampled_drafts=True)
+    prompts = _prompts(4, seed=21)
+    ref = Scheduler(base).serve(
+        [Request(p, max_new_tokens=7) for p in prompts])
+    got = Scheduler(eng, adaptive_k=True).serve(_mixed_requests(prompts))
+    for i in (0, 2):                             # the greedy rows
+        np.testing.assert_array_equal(
+            got["results"][i]["tokens"], ref["results"][i]["tokens"],
+            err_msg="greedy row perturbed by controller/sampled neighbors")
+    assert "k_final" in got["results"][0]
+    assert "speculation" in got and "weighted_acceptance_length" in got
+
+
+def test_adaptive_k_fixed_point_is_bitwise_fixed_k():
+    """A controller pinned to full depth (k_min=K, headroom>=0 with an
+    optimistic EMA) must reproduce the fixed-K scheduler bitwise for BOTH
+    policies — the mask at K is the identity end to end."""
+    eng = get_engine()
+    prompts = _prompts(4, seed=23)
+    ref = Scheduler(eng).serve(_mixed_requests(prompts))
+    cfg = SpeculationConfig(k_min=eng.ecfg.K)
+    got = Scheduler(eng, adaptive_k=cfg).serve(_mixed_requests(prompts))
+    for r, g in zip(ref["results"], got["results"]):
+        np.testing.assert_array_equal(r["tokens"], g["tokens"])
+
+
+def test_sampled_draft_composition_invariance():
+    """A seeded sampled request with warped-proposal drafting emits the
+    same stream solo and among arbitrary neighbors — the draft keys are
+    per-row counters, so neighbors can't perturb the draws."""
+    eng = get_engine()
+    target = _prompts(1, seed=31)[0]
+    others = _prompts(3, seed=32)
+    solo = Scheduler(eng, adaptive_k=True).serve(
+        [Request(target, sampling=SAMPLED)])["results"][0]["tokens"]
+    for order in ([target] + others, others + [target]):
+        reqs = [Request(p, sampling=SAMPLED if p is target else None)
+                for p in order]
+        rep = Scheduler(eng, adaptive_k=True).serve(reqs)
+        got = [r for q, r in zip(sorted(reqs, key=lambda r: r.rid),
+                                 rep["results"]) if q.sampling == SAMPLED]
+        np.testing.assert_array_equal(
+            got[0]["tokens"], solo,
+            err_msg="sampled-draft stream changed with batch composition")
+
+
+@pytest.mark.parametrize("shard", [0, 4, 8])
+def test_adaptive_sampled_cross_layout_mesh_losslessness(shard):
+    """Paged + adaptive + sampled drafts on a mesh of ``shard`` forced
+    host devices equals the contiguous single-device engine bitwise, both
+    policies in one batch."""
+    if shard:
+        require_devices(shard)
+    prompts = _prompts(4, seed=41, lo=3, hi=10)
+    ref = Scheduler(get_engine("contiguous"), adaptive_k=True).serve(
+        _mixed_requests(prompts, budget=6))
+    got = Scheduler(get_engine("paged", shard=shard), adaptive_k=True).serve(
+        _mixed_requests(prompts, budget=6))
+    for r, g in zip(ref["results"], got["results"]):
+        np.testing.assert_array_equal(
+            r["tokens"], g["tokens"],
+            err_msg=f"rid {r['rid']} diverged across layouts (shard={shard})")
+
+
+def test_preempt_resume_with_adaptive_sampled_drafts():
+    """Tight pool forces eviction mid-stream: every request — greedy and
+    seeded sampled with warped-proposal drafts — resumes bitwise, and the
+    rid-keyed controller state survives the slot change."""
+    eng = get_engine(pool_pages=5)
+    prompts = _prompts(3, seed=51, lo=6, hi=7)
+    budgets = [14, 14, 8]
+    sps = [SAMPLED, None, SamplingParams(temperature=0.9, seed=9)]
+
+    def reqs():
+        return [Request(p, max_new_tokens=b, sampling=sp)
+                for p, b, sp in zip(prompts, budgets, sps)]
+
+    rep = Scheduler(eng, adaptive_k=True).serve(reqs())
+    assert rep["preemptions"] >= 1, "workload was meant to force eviction"
+    for res, p, b, sp in zip(rep["results"], prompts, budgets, sps):
+        solo = Scheduler(eng, adaptive_k=True).serve(
+            [Request(p, max_new_tokens=b, sampling=sp)])["results"][0]
+        np.testing.assert_array_equal(
+            res["tokens"], solo["tokens"],
+            err_msg=f"rid {res['rid']} diverged after preemption")
+    assert eng.allocator.n_free == eng.pool_pages
+
+
+def test_streamed_equals_virtual_twin_with_controller():
+    """Wall-clock AsyncEngine with ``adaptive_k=True`` on the sampled-draft
+    engine yields exactly the virtual twin's streams: wall pacing feeds the
+    clock, never the controller."""
+    eng = get_engine()
+    rng = np.random.default_rng(61)
+    workload = [(rng.integers(1, 200, size=int(rng.integers(2, 9))
+                              ).astype(np.int32),
+                 None if i % 2 == 0
+                 else SamplingParams(temperature=0.8, seed=90 + i),
+                 int(rng.integers(3, 9)))
+                for i in range(5)]
+    twin = virtual_twin_report(eng, workload, adaptive_k=True)
+
+    async def go():
+        aeng = AsyncEngine(eng, adaptive_k=True)
+
+        async def one(p, sp, b):
+            return [t async for t, _ in aeng.generate(p, sp,
+                                                      max_new_tokens=b)]
+
+        streams = await asyncio.gather(*(one(*w) for w in workload))
+        return streams, await aeng.close()
+
+    streams, rep = run(go())
+    assert rep["n_requests"] == len(workload)
+    for got, ref in zip(streams, twin["results"]):
+        assert got == ref["tokens"].tolist()
+
+
+def test_one_jitted_trace_per_layout_with_adaptive_k():
+    """``k_row`` is traced: serving mixed batches at many per-row depths
+    must compile each greedy-twin of the step exactly once."""
+    eng = get_engine(batch=3)
+    for seed in (71, 72):
+        prompts = _prompts(3, seed=seed)
+        Scheduler(eng, adaptive_k=True).serve(_mixed_requests(prompts))
+    n_traces = sum(f._cache_size() for f in eng._paged_step.values())
+    assert n_traces <= 2, (
+        f"{n_traces} traces of the paged step — k_row retraced the jit "
+        f"(expected at most one per greedy/mixed twin)")
+
+
+def test_ar_drafter_sampled_drafts_deterministic():
+    """The autoregressive drafter samples in-scan: same seeded request
+    twice on the AR engine is bitwise stable (keys are scan xs, not
+    trace-order dependent)."""
+    eng = get_engine(drafter_mode="ar")
+    p = _prompts(1, seed=81)[0]
+    runs = [Scheduler(eng, adaptive_k=True).serve(
+        [Request(p, sampling=SAMPLED)])["results"][0]["tokens"]
+        for _ in range(2)]
+    np.testing.assert_array_equal(runs[0], runs[1])
+
+
+# ---------------------------------------------------------------------------
+# health() fixes (satellite 1) + weighted AL report (satellite 2)
+# ---------------------------------------------------------------------------
+
+def test_health_zero_completed_no_error():
+    """Zero completed requests: percentiles are 0.0, never an IndexError."""
+    eng = get_engine()
+
+    async def go():
+        aeng = AsyncEngine(eng)
+        await aeng.start()
+        h = aeng.health()
+        await aeng.close()
+        return h
+
+    h = run(go())
+    assert h["finished"] == 0 and h["aborted"] == 0
+    assert h["p50_wait_s"] == 0.0 and h["p99_wait_s"] == 0.0
+
+
+def test_health_all_aborted_session():
+    """Every request aborted (some before ever being admitted): health()
+    must screen never-admitted requests by the WALL admission stamp and
+    still return finite percentiles."""
+    eng = get_engine(batch=2)
+    prompts = _prompts(4, seed=91)
+
+    async def go():
+        aeng = AsyncEngine(eng, max_pending=8)
+        handles = [await aeng.submit(p, max_new_tokens=8) for p in prompts]
+        # abort the queued tail first (never admitted: t_admit == 0.0),
+        # then the running head
+        for h in reversed(handles):
+            aeng.abort(h)
+        health = aeng.health()
+        rep = await aeng.close()
+        return health, rep
+
+    h, rep = run(go())
+    assert h["finished"] == 0
+    assert h["aborted"] == len(prompts)
+    assert h["p50_wait_s"] == 0.0 and h["p99_wait_s"] == 0.0
+    assert rep["aborted"] == len(prompts)
+
+
+def test_report_weighted_acceptance_length():
+    """The aggregate ``weighted_acceptance_length`` is total committed
+    decode tokens over total decode iterations — short requests no longer
+    dominate the mean the way the unweighted per-request average lets
+    them."""
+    eng = get_engine()
+    prompts = _prompts(3, seed=95)
+    rep = Scheduler(eng).serve(
+        [Request(p, max_new_tokens=b)
+         for p, b in zip(prompts, (2, 8, 8))])
+    w = rep["weighted_acceptance_length"]
+    assert 0.0 < w <= eng.ecfg.K + 2
+    # per-request acceptance_length = dec_tok / iters, so the weighted
+    # aggregate must equal sum(AL_r * iters_r) / sum(iters_r)
+    tot_tok = sum(r["acceptance_length"] * r["iters"]
+                  for r in rep["results"])
+    tot_it = sum(r["iters"] for r in rep["results"])
+    np.testing.assert_allclose(w, tot_tok / tot_it, rtol=1e-5)
+    # the unweighted per-request mean is still reported alongside
+    assert "mean_acceptance_length" in rep
