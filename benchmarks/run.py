@@ -26,7 +26,7 @@ def main() -> None:
                             table11_continuous, table12_paged, table13_async,
                             table14_sharded, table15_sampling,
                             table16_prefix, table17_streaming,
-                            table18_adaptive, roofline)
+                            table18_adaptive, table19_swap, roofline)
 
     epochs = 12 if args.quick else 22
     jobs = {
@@ -48,6 +48,7 @@ def main() -> None:
         "16": lambda: table16_prefix.run(epochs=epochs),
         "17": lambda: table17_streaming.run(epochs=epochs),
         "18": lambda: table18_adaptive.run(epochs=epochs),
+        "19": lambda: table19_swap.run(epochs=epochs),
         "roofline": lambda: roofline.run(),
     }
     wanted = list(jobs) if args.tables == "all" else [

@@ -51,12 +51,15 @@ def kv_bytes(eng) -> int:
 def peak_resident(events) -> int:
     """Max requests concurrently holding KV (admit → preempt/finish), from
     the scheduler's chronological virtual-time event trace — a preempted
-    request holds zero pages while evicted, so it must not count."""
+    request holds zero pages while evicted, so it must not count. A
+    swapped-out request likewise releases its exclusive pages to the host
+    pool ("swap_out") and re-acquires device residency at "swap_in";
+    "swap_drop" only frees host bytes, so residency is unchanged."""
     live, peak = set(), 0
     for _, kind, rid in events:
-        if kind == "admit":
+        if kind in ("admit", "swap_in"):
             live.add(rid)
-        elif kind in ("preempt", "finish"):
+        elif kind in ("preempt", "swap_out", "finish"):
             live.discard(rid)
         peak = max(peak, len(live))
     return peak

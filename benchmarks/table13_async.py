@@ -75,8 +75,8 @@ def run(epochs=15, n_requests=24, max_new=24, mean_gap=0.5):
             rep = Scheduler(eng, preempt=preempt).serve(reqs())
             if it == 0:
                 # peak_pages must reflect the measured pass only, not the
-                # max across both phases (BlockAllocator.reset_stats)
-                eng.allocator.reset_stats()
+                # max across both phases (device + host pools both)
+                eng.reset_stats()
         byt = kv_bytes(eng)
         peak = peak_resident(rep["events"])
         per_mib = peak / (byt / 2**20)

@@ -1,0 +1,146 @@
+"""Beyond-paper Table 19 — swap-to-host preemption vs recompute-prefill
+preemption at IDENTICAL device pool bytes.
+
+Workload: long-prompt Poisson mix (P-EAGLE's reasoning-workload premise —
+32-token prompts over the long-tail budget mix), more decode slots than the
+page pool can back, so the scheduler must preempt. The two disciplines:
+
+  recompute (PR 6/7) — the victim's pages are freed; resume re-pays the
+      whole prefix as a recompute-prefill. Lossless, but every preemption
+      burns prefill FLOPs proportional to prompt+progress.
+
+  swap-to-host       — ``EngineConfig(swap="host")``: the victim's pages
+      (KV + recurrent stream state + sampling rows) move to a HostPagePool
+      and resume is a device scatter. Same token streams (test invariant:
+      tests/test_swap.py), zero recomputed prefill tokens while the host
+      pool has room.
+
+Both run under the SAME calibrated virtual-clock cost model, so otps_vt is
+an honest apples-to-apples: a recompute resume advances the clock by
+``prefill_cost + prefill_cost_per_token * prefix`` while a swap leg costs
+``swap_cost_per_byte * bytes_moved`` (PCIe-ish: transfers are cheap
+relative to recomputing a long prefix, which is exactly when swap wins —
+the policy gate in scheduler._swap_beats_recompute prices this per victim).
+
+Reported per discipline: otps_vt, recomputed prefill tokens, preemption
+split (swap/recompute/drops), device-pool and host-pool peaks. PASS gates
+(acceptance criteria): swap must show FEWER recomputed prefill tokens AND
+otps_vt >= recompute at equal device pool bytes. Rows are persisted to
+results/table19_swap.csv.
+"""
+import numpy as np
+
+from benchmarks.common import (get_corpus, get_target, longtail_budgets, row,
+                               train_drafter, write_results_csv)
+from benchmarks.table12_paged import kv_bytes, peak_resident
+from repro.serving import Engine, EngineConfig, Request, Scheduler
+
+PAGE = 16
+MAX_LEN = 128
+B_SLOTS = 12         # decode slots — more than the pool can back
+POOL_ROWS = 3        # device pool = 3 max_len rows' worth of pages (24)
+PROMPT_LEN = 32      # long prompts: 2 pages claimed at admission
+
+# virtual-clock calibration (both disciplines use the SAME numbers):
+# recomputing one prefix token costs 0.05 iterations; moving one byte
+# host<->device costs 1e-7 — a ~50 KB slot swap ≈ 0.005 vt vs 1.0 + 32 *
+# 0.05 = 2.6 vt to recompute its prefill. Uncalibrated (both 0.0) the two
+# disciplines tie on the clock by construction.
+PREFILL_COST_PER_TOKEN = 0.05
+SWAP_COST_PER_BYTE = 1e-7
+
+
+def poisson_arrivals(n: int, mean_gap: float, rng) -> list:
+    return np.cumsum(rng.exponential(mean_gap, size=n)).tolist()
+
+
+def run(epochs=15, n_requests=24, max_new=24, mean_gap=0.5):
+    arch = "qwen2-1.5b"
+    tcfg, m, tparams = get_target(arch)
+    dcfg, dp, _ = train_drafter("table9_peagle_" + arch, arch=arch,
+                                epochs=epochs, n_layers=4, k_train=8)
+
+    corpus = get_corpus(arch)
+    rng = np.random.default_rng(19)
+    rows_ = rng.choice(len(corpus), size=n_requests, replace=False)
+    prompts = [np.asarray(corpus[i, :PROMPT_LEN]) for i in rows_]
+    budgets = longtail_budgets(n_requests, max_new, rng)
+    arrivals = poisson_arrivals(n_requests, mean_gap, rng)
+
+    def make(swap):
+        return Engine(tcfg, dcfg, tparams, dp,
+                      EngineConfig(K=5, max_new_tokens=max_new,
+                                   drafter_mode="parallel", max_len=MAX_LEN,
+                                   kv_layout="paged", page_size=PAGE,
+                                   pool_pages=POOL_ROWS * MAX_LEN // PAGE,
+                                   kv_growth="incremental", swap=swap),
+                      B_SLOTS)
+
+    def reqs():
+        return [Request(p, max_new_tokens=b, arrival_time=a)
+                for p, b, a in zip(prompts, budgets, arrivals)]
+
+    results, csv_rows = {}, []
+    token_ref = None
+    for name, swap in [("recompute", "none"), ("swap", "host")]:
+        eng = make(swap)
+        rep = None
+        for it in range(2):                      # warm first, measure second
+            rep = Scheduler(
+                eng, prefill_cost_per_token=PREFILL_COST_PER_TOKEN,
+                swap_cost_per_byte=SWAP_COST_PER_BYTE).serve(reqs())
+            if it == 0:
+                # peaks must reflect the measured pass only (device AND
+                # host pool high-water marks — Engine.reset_stats)
+                eng.reset_stats()
+        toks = [tuple(r["tokens"]) for r in
+                sorted(rep["results"], key=lambda r: r["rid"])]
+        if token_ref is None:
+            token_ref = toks
+        else:
+            assert toks == token_ref, \
+                "swap discipline changed token streams (losslessness broken)"
+        byt = kv_bytes(eng)
+        peak = peak_resident(rep["events"])
+        hp = rep["host_pool"]
+        results[name] = dict(
+            otps_vt=rep["otps_vt"], otps=rep["otps"],
+            recomputed_prefill_tokens=rep["recomputed_prefill_tokens"],
+            preemptions=rep["preemptions"],
+            preempt_swap=rep["preempt_swap"],
+            preempt_recompute=rep["preempt_recompute"],
+            swap_drops=rep["swap_drops"],
+            peak_resident=peak, kv_bytes=byt,
+            peak_pages=rep["peak_pages"],
+            host_peak_bytes=hp["peak_bytes"],
+            p99_latency_vt=rep["p99_latency_vt"])
+        csv_rows.append({"discipline": name, **results[name]})
+        row(f"table19/{name}", 1e6 / max(rep["otps"], 1e-9),
+            f"otps_vt={rep['otps_vt']:.2f} "
+            f"recomputed_prefill_tokens={rep['recomputed_prefill_tokens']} "
+            f"preempt={rep['preemptions']} "
+            f"(swap={rep['preempt_swap']} recompute="
+            f"{rep['preempt_recompute']} drops={rep['swap_drops']}) "
+            f"peak_pages={rep['peak_pages']}/{eng.pool_pages} "
+            f"host_peak={hp['peak_bytes']}B "
+            f"p99_lat_vt={rep['p99_latency_vt']:.1f}")
+
+    r_rec, r_swp = results["recompute"], results["swap"]
+    fewer = (r_swp["recomputed_prefill_tokens"]
+             < r_rec["recomputed_prefill_tokens"])
+    faster = r_swp["otps_vt"] >= r_rec["otps_vt"]
+    gain = r_swp["otps_vt"] / max(r_rec["otps_vt"], 1e-9)
+    row("table19/swap_gain", gain,
+        f"swap vs recompute otps_vt = {gain:.2f}x, recomputed prefill "
+        f"tokens {r_swp['recomputed_prefill_tokens']} vs "
+        f"{r_rec['recomputed_prefill_tokens']} at equal device pool bytes "
+        f"({'PASS' if fewer and faster else 'FAIL'}: swap must recompute "
+        "fewer prefill tokens AND hold otps_vt >= recompute)")
+    csv_rows.append({"discipline": "swap_gain", "otps_vt": gain})
+    path = write_results_csv("table19_swap.csv", csv_rows)
+    print(f"# wrote {path}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -18,6 +18,10 @@ deterministic virtual clock (0 = everything arrives at t=0); async runs
 report virtual-time p50/p99 latency and queue wait plus preemption counts.
 ``--kv-growth upfront`` restores PR-2's static admission sizing,
 ``--no-preempt`` disables eviction (slots stall on pool exhaustion instead).
+``--swap host`` turns preemption into swap-to-host: the victim's pages move
+to a byte-budgeted host pool (``--host-pool-bytes``) and resume is a device
+scatter instead of a recompute-prefill — same token streams, no prefill
+FLOPs re-paid.
 ``--round-based`` serves the same queue with the pre-scheduler baseline
 (batch refilled only between full generation rounds) for comparison.
 vlm/encdec targets serve through the scheduler like everything else —
@@ -100,6 +104,15 @@ def main():
     ap.add_argument("--no-preempt", action="store_true",
                     help="never evict a running slot on pool exhaustion; "
                          "slots stall until pages free up")
+    ap.add_argument("--swap", default="none", choices=["none", "host"],
+                    help="preemption flavor: host = copy the victim's pages "
+                         "(KV + stream state + sampling rows) to a host "
+                         "pool and resume by device scatter instead of "
+                         "recompute-prefill (paged layout only; lossless "
+                         "either way)")
+    ap.add_argument("--host-pool-bytes", type=int, default=0,
+                    help="host swap-pool byte budget (0 = unbounded); when "
+                         "full, preemption falls back to recompute-prefill")
     ap.add_argument("--adaptive-k", action="store_true",
                     help="per-request dynamic draft length: an acceptance "
                          "EMA per request sets k_row <= K via the jitted "
@@ -158,7 +171,9 @@ def main():
                               bucket_prefill=not args.no_bucket,
                               kv_growth=args.kv_growth,
                               shard_model=args.shard_model > 0, mesh=mesh,
-                              draft_sampling=args.draft_sampling),
+                              draft_sampling=args.draft_sampling,
+                              swap=args.swap,
+                              host_pool_bytes=args.host_pool_bytes),
                  args.batch)
     if mesh is not None:
         print(f"model-sharded over {mesh.shape['model']} devices "
@@ -225,6 +240,15 @@ def main():
               f"wait p50/p99={rep['p50_wait_vt']:.1f}/"
               f"{rep['p99_wait_vt']:.1f} vt  "
               f"preemptions={rep['preemptions']}")
+    if args.swap == "host":
+        hp = rep["host_pool"]
+        print(f"swap-to-host: {rep['preempt_swap']} swapped / "
+              f"{rep['preempt_recompute']} recomputed / "
+              f"{rep['swap_drops']} dropped  "
+              f"recomputed_prefill_tokens={rep['recomputed_prefill_tokens']}"
+              f"  host pool peak {hp['peak_bytes']} B"
+              + (f" of {hp['capacity_bytes']}" if hp["capacity_bytes"]
+                 else " (unbounded)"))
     for r in rep["results"]:
         pre = f"  preempt={r['n_preempt']}" if r["n_preempt"] else ""
         print(f"  req {r['rid']:3d}: {r['n_new']:3d} tok in {r['iters']:3d} "

@@ -7,10 +7,10 @@ from repro.serving.speculation import SpeculationConfig, SpeculationController
 from repro.serving.streaming import (AsyncEngine, StreamHandle,
                                      virtual_twin_report)
 from repro.serving import cache_ops
-from repro.serving.cache_ops import BlockAllocator
+from repro.serving.cache_ops import BlockAllocator, HostPagePool
 
 __all__ = ["ABORTED", "AsyncEngine", "BlockAllocator", "Engine",
-           "EngineConfig", "FINISHED", "LLMEngine", "PrefixCache", "Request",
-           "SamplingParams", "Scheduler", "SpeculationConfig",
-           "SpeculationController", "StreamHandle", "serve_round_based",
-           "virtual_twin_report", "cache_ops"]
+           "EngineConfig", "FINISHED", "HostPagePool", "LLMEngine",
+           "PrefixCache", "Request", "SamplingParams", "Scheduler",
+           "SpeculationConfig", "SpeculationController", "StreamHandle",
+           "serve_round_based", "virtual_twin_report", "cache_ops"]

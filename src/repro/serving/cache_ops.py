@@ -40,6 +40,21 @@ kernels/decode_attention.py, which reads pages through the block table
 without materializing the view), and ``scatter_state`` writes the updated
 view back through the table — so speculative rollback-invalidation and
 recurrent snapshot commit work bit-identically across layouts.
+
+Swap-to-host (the SWAPPED lifecycle state)
+------------------------------------------
+Preemption's third page state beyond allocated/free: instead of discarding
+a victim's pages and re-paying the prefix as a recompute-prefill, the
+engine snapshots the slot with ``extract_slot`` (per-slot rows + gathered
+page payloads in one jit), trims the copy host-side to the refcount==1
+pages, and parks the bytes in a ``HostPagePool``. Pages shared with the
+prefix cache (or another slot) stay *resident* — the swap handle keeps the
+slot's reference, pinning them against LRU eviction — so only the
+exclusive remainder moves. Swap-in re-admits the host bytes through
+``admit_pages`` with a ``scatter_row`` that masks the still-resident
+pages, which makes resume a pure device scatter: bitwise the state the
+victim had at its eviction step boundary, for attention KV, recurrent
+stream state, and sampling/logprob rows alike.
 """
 from __future__ import annotations
 
@@ -239,11 +254,73 @@ class BlockAllocator:
 
     def reset_stats(self) -> None:
         """Restart the ``peak_used`` high-water mark at the CURRENT
-        residency. Multi-phase benchmark runs (table12/13/16 compare
+        residency. Multi-phase benchmark runs (table12/13/16/19 compare
         disciplines or warm-up vs measured passes in one process) call this
         between phases so each phase reports its own honest peak instead of
         the max across every phase so far."""
         self.peak_used = self.n_used
+
+
+class HostPagePool:
+    """Byte-budgeted host-side store for swapped-out requests (the SWAPPED
+    page-lifecycle state). Entries are opaque handles keyed by request id;
+    the pool only does byte accounting — ``put`` refuses (returns False)
+    when the budget would overflow, which is the scheduler's signal to fall
+    back to recompute-prefill preemption instead of crashing or stalling.
+    ``peak_used``/``reset_stats`` mirror the BlockAllocator's high-water
+    discipline so multi-phase benchmarks report honest per-phase peaks."""
+
+    def __init__(self, capacity_bytes: int = 0):
+        if capacity_bytes < 0:
+            raise ValueError(f"host_pool_bytes={capacity_bytes}")
+        self.capacity = int(capacity_bytes)   # 0 = unbounded
+        self._entries: Dict[object, tuple] = {}   # key -> (handle, nbytes)
+        self.used_bytes = 0
+        self.peak_used = 0
+
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def can_store(self, nbytes: int) -> bool:
+        """Whether ``nbytes`` more would still fit the budget."""
+        return self.capacity <= 0 or self.used_bytes + nbytes <= self.capacity
+
+    def put(self, key, handle, nbytes: int) -> bool:
+        """Store ``handle`` under ``key``; False (storing nothing) when the
+        budget can't hold it. Duplicate keys raise — two live snapshots of
+        one request would mean a lost or double resume."""
+        if key in self._entries:
+            raise ValueError(f"swap handle for {key!r} already stored")
+        nbytes = int(nbytes)
+        if not self.can_store(nbytes):
+            return False
+        self._entries[key] = (handle, nbytes)
+        self.used_bytes += nbytes
+        self.peak_used = max(self.peak_used, self.used_bytes)
+        return True
+
+    def get(self, key):
+        """The stored handle, or None."""
+        ent = self._entries.get(key)
+        return None if ent is None else ent[0]
+
+    def pop(self, key):
+        """Remove and return the handle, releasing its bytes (swap-in
+        consumed it, or an abort/fallback dropped it). Missing keys raise —
+        like the allocator, double-free means corrupted bookkeeping."""
+        if key not in self._entries:
+            raise KeyError(f"no swap handle for {key!r}")
+        handle, nbytes = self._entries.pop(key)
+        self.used_bytes -= nbytes
+        return handle
+
+    def reset_stats(self) -> None:
+        """Restart the ``peak_used`` high-water mark at current usage (same
+        contract as BlockAllocator.reset_stats)."""
+        self.peak_used = self.used_bytes
 
 
 def _is_paged_dict(d: dict, max_len: int) -> bool:
@@ -436,3 +513,32 @@ def admit_pages(pstate, src, slot: Array, table_row: Array, axes, spec,
             sr[None], tag)
 
     return jax.tree.map(admit, out, src, spec)
+
+
+def view_width_axis(ndim: int, tag: int) -> int:
+    """Absolute index of the W (position-within-slot) axis of a contiguous
+    view leaf with ``ndim`` dims — one right of where the pool's page axis
+    sits. Host-side swap code uses this to slice page spans (page ``i``
+    occupies ``[i*page, (i+1)*page)`` along this axis) out of / back into
+    the gathered view with plain numpy indexing."""
+    return ndim + _page_axis(tag) + 1
+
+
+def extract_slot(pstate, slot: Array, table_row: Array, axes, spec):
+    """Inverse of ``admit_pages``: re-express batch row ``slot`` of a paged
+    state as a batch-1 *contiguous* state — per-slot leaves slice their
+    ``slot`` row, paged leaves gather the row's pages (``table_row`` (nb,))
+    into the per-slot view. Leaves without a batch axis (global counters)
+    pass through unchanged; restore paths must ignore them (``write_slot``
+    already does). This is the device half of swap-out: one jit-friendly
+    gather whose output, round-tripped through host memory, re-admits
+    bitwise via ``admit_pages`` — unallocated table entries (-1) read as
+    empty positions exactly as ``gather_pages`` guarantees, and the matching
+    swap-in drops those spans via its ``scatter_row`` mask."""
+    def ex(leaf, ax, tag):
+        if tag != NOT_PAGED:
+            return gather_pages(leaf, table_row[None], tag)
+        if ax < 0:
+            return leaf
+        return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=ax)
+    return jax.tree.map(ex, pstate, axes, spec)

@@ -148,6 +148,20 @@ class EngineConfig:
     # path. Off by default: the one-hot argmax proposal is the
     # pre-adaptive behavior.
     draft_sampling: bool = False
+    # --- swap-to-host preemption -----------------------------------------
+    # swap="host": on preemption the victim slot's state — every KV page it
+    # exclusively owns (refcount == 1) plus its per-slot rows (recurrent
+    # stream state, tokens/logprobs, sampling policy, taps) — is copied to
+    # a host-side cache_ops.HostPagePool, and resume becomes a device
+    # scatter (swap_in_slot) instead of a recompute-prefill: bitwise the
+    # state the victim had at its eviction step boundary. Pages shared
+    # with the prefix cache (or another slot) stay resident — the swap
+    # handle keeps the slot's reference, pinning them — and are re-mapped
+    # on swap-in. Paged-only. host_pool_bytes caps the host snapshot
+    # budget (0 = unbounded); when it can't hold a victim, the scheduler
+    # falls back to lossless recompute-prefill preemption.
+    swap: str = "none"               # none | host
+    host_pool_bytes: int = 0         # host snapshot budget; 0 = unbounded
 
     def __post_init__(self):
         if self.greedy is not None:
@@ -208,6 +222,27 @@ def make_decode_state(model, tcfg: ModelConfig, dcfg: Optional[DrafterConfig],
     return state
 
 
+@dataclass
+class _SwapHandle:
+    """One swapped-out request's host-side snapshot (HostPagePool entry).
+
+    ``snap`` is the device_get of ``cache_ops.extract_slot`` trimmed to
+    what must actually move: per-slot rows in full, paged-leaf views cut
+    down to the spans of the ``host_idx`` pages (zero-size placeholders
+    elsewhere — swap-in rebuilds the full-width view around them and its
+    scatter mask drops the placeholder spans). ``page_row`` is the slot's
+    ordered page list at eviction; pages NOT in ``host_idx`` stayed
+    resident on device — the handle kept the slot's allocator reference
+    for them, which pins them against prefix-cache LRU eviction until
+    swap-in remaps or drop_swap releases them."""
+    snap: dict
+    page_row: List[int]       # ordered pages at eviction time
+    host_idx: List[int]       # row indices whose pages moved to host
+    last: int                 # committed step-boundary position
+    sampled: bool             # _slot_sampled mirror to restore
+    nbytes: int
+
+
 class Engine:
     """Batched speculative-decoding engine over ``batch`` request slots.
 
@@ -252,6 +287,21 @@ class Engine:
                 "sharing unit)")
         self.prefix_cache = (PrefixCache(ecfg.page_size)
                              if self.paged and ecfg.prefix_cache else None)
+        if ecfg.swap not in ("none", "host"):
+            raise ValueError(f"unknown swap {ecfg.swap!r}")
+        if ecfg.swap == "host" and not self.paged:
+            raise ValueError(
+                "swap='host' requires kv_layout='paged' (pages are the "
+                "swap unit)")
+        self.swap_enabled = ecfg.swap == "host"
+        self.host_pool = (cache_ops.HostPagePool(ecfg.host_pool_bytes)
+                          if self.swap_enabled else None)
+        # bytes the most recent swap_out_slot / swap_in_slot moved — the
+        # scheduler reads this right after the call to charge its clock
+        # (same read-after-call idiom as last_hit_tokens)
+        self.swap_last_bytes = 0
+        self._b1_tpl = None          # cached batch-1 contiguous eval_shape
+        self._swap_sizes = None      # cached (row bytes, per-page bytes)
         # the previous serving session's final state — cached page content
         # lives in its pool arrays, so serve_state() resumes from it
         self._serve_state: Optional[dict] = None
@@ -340,6 +390,11 @@ class Engine:
             # growth never recompiles (pinned by tests/test_cache_ops.py)
             self._set_table_row = jax.jit(
                 lambda bt, slot, row: bt.at[slot].set(row))
+            if self.paged:
+                # swap-to-host: one gather trace serves every (slot, row)
+                # pair; scatter is the admit trace minus the resume fixup
+                self._swap_gather = jax.jit(self._swap_gather_impl)
+                self._swap_scatter = jax.jit(self._swap_scatter_impl)
             return
         rp, tp, dp = self._repl, self._tparam_sh, self._dparam_sh
         # contiguous decode-state sharding: full-length k/v leaves sharded
@@ -396,6 +451,15 @@ class Engine:
             self._hit_chunk = jj(self._hit_chunk_impl,
                                  in_shardings=(tp, dp, csh, rp, rp),
                                  out_shardings=csh)
+            # swap-to-host: the gathered batch-1 snapshot replicates (it is
+            # heading to host memory), and swap-in re-scatters a replicated
+            # host payload back into the sharded pools
+            self._swap_gather = jj(self._swap_gather_impl,
+                                   in_shardings=(psh, rp, rp),
+                                   out_shardings=rp)
+            self._swap_scatter = jj(self._swap_scatter_impl,
+                                    in_shardings=(psh, rp, rp, rp, rp),
+                                    out_shardings=psh)
         self._set_table_row = jj(lambda bt, slot, row: bt.at[slot].set(row),
                                  in_shardings=(rp, rp, rp), out_shardings=rp)
 
@@ -1241,6 +1305,240 @@ class Engine:
         core["block_table"] = state["block_table"].at[slot].set(
             jnp.full((self.pages_per_slot,), -1, jnp.int32))
         return core
+
+    # ------------------------------------------------------------------
+    # swap-to-host preemption (EngineConfig.swap="host")
+    # ------------------------------------------------------------------
+    def _swap_gather_impl(self, state, slot, row):
+        """Batch-1 contiguous snapshot of ``slot``: per-slot rows sliced,
+        paged leaves gathered through ``row`` — one jit, the device half
+        of swap-out (cache_ops.extract_slot)."""
+        core = {k: v for k, v in state.items() if k != "block_table"}
+        return cache_ops.extract_slot(core, slot, row, self.paged_axes,
+                                      self.pspec)
+
+    def _swap_scatter_impl(self, dst, src, slot, row, scatter_row):
+        """Swap-in: ``_paged_admit_impl`` minus the resume fixup — the
+        snapshot already IS a step-boundary state, so re-admitting it
+        verbatim restores the victim bitwise. ``scatter_row`` masks pages
+        that never left the device (-1: dropped by scatter_pages)."""
+        core = {k: v for k, v in dst.items() if k != "block_table"}
+        core = cache_ops.admit_pages(core, src, slot, row, self.paged_axes,
+                                     self.pspec, scatter_row=scatter_row)
+        core["block_table"] = dst["block_table"].at[slot].set(row)
+        return core
+
+    def _b1_template(self):
+        """Cached abstract batch-1 contiguous state (the swap snapshot's
+        shapes/dtypes; also the skeleton swap-in rebuilds around)."""
+        if self._b1_tpl is None:
+            self._b1_tpl = jax.eval_shape(
+                self._prefill_impl, self.tparams, self.dparams,
+                jax.ShapeDtypeStruct((1, 4), jnp.int32), {},
+                sampling_state_sds(1))
+        return self._b1_tpl
+
+    def _swap_layout(self):
+        """Cached ``(row_bytes, page_bytes)``: host bytes of one slot's
+        per-slot rows, and of one page's payload summed across every paged
+        leaf — ``swap_bytes_estimate`` prices a victim without touching
+        the device."""
+        if self._swap_sizes is None:
+            row_b = page_b = 0
+            for t, ax, tag in zip(jax.tree.leaves(self._b1_template()),
+                                  jax.tree.leaves(self.paged_axes),
+                                  jax.tree.leaves(self.pspec)):
+                n = int(np.prod(t.shape, dtype=np.int64)) * t.dtype.itemsize
+                if tag != cache_ops.NOT_PAGED:
+                    page_b += n // self.pages_per_slot
+                elif ax >= 0:
+                    row_b += n
+            self._swap_sizes = (row_b, page_b)
+        return self._swap_sizes
+
+    @staticmethod
+    def _host_span(host_idx: List[int], page: int):
+        """View indices (along the W axis) of the pages in ``host_idx``."""
+        return np.concatenate([np.arange(i * page, (i + 1) * page)
+                               for i in host_idx])
+
+    def swap_bytes_estimate(self, slot: int) -> int:
+        """Host bytes swapping ``slot`` out would store right now: its
+        per-slot rows plus one page payload per page it exclusively owns
+        (refcount == 1; shared pages stay resident)."""
+        row_b, page_b = self._swap_layout()
+        n_host = sum(1 for p in self._slot_pages[slot]
+                     if self.allocator.refcount(p) == 1)
+        return row_b + page_b * n_host
+
+    def swap_out_slot(self, state: dict, slot: int, rid):
+        """Preempt ``slot`` by copying its state to the host pool under key
+        ``rid`` instead of discarding it. Returns ``(state, ok)``: on
+        ``ok`` the slot is freed (device pages of refcount 1 recycled,
+        shared pages left resident under the handle's reference) and
+        ``swap_last_bytes`` holds the bytes parked; ``ok`` False means the
+        host pool couldn't take the snapshot — NOTHING changed, the caller
+        falls back to recompute-prefill preemption.
+
+        Called only at a harvest/sync boundary (where the scheduler
+        preempts): there the slot's state is self-consistent — caches
+        forwarded through ``last - 1``, the token at ``last`` committed
+        but not yet verified — so restoring it bitwise (swap_in_slot)
+        continues the run token-for-token, greedy and seeded-sampled rows
+        alike. The committed counters are zeroed in the snapshot to match
+        the scheduler's resume convention (``_prev_new = 0``)."""
+        if not self.swap_enabled:
+            return state, False
+        pages = self._slot_pages[slot]
+        host_idx = [i for i, p in enumerate(pages)
+                    if self.allocator.refcount(p) == 1]
+        row_b, page_b = self._swap_layout()
+        if not self.host_pool.can_store(row_b + page_b * len(host_idx)):
+            return state, False
+        ps = self.ecfg.page_size
+        row = np.full((self.pages_per_slot,), -1, np.int32)
+        row[:len(pages)] = pages
+        src = jax.device_get(self._swap_gather(
+            state, jnp.asarray(slot, jnp.int32), jnp.asarray(row)))
+        span = (self._host_span(host_idx, ps) if host_idx else None)
+        ph = np.zeros((0,), np.int8)     # structure-keeping placeholder
+
+        def trim(leaf, ax, tag):
+            if tag != cache_ops.NOT_PAGED:
+                if span is None:
+                    return ph
+                w_ax = cache_ops.view_width_axis(leaf.ndim, tag)
+                return np.ascontiguousarray(np.take(leaf, span, axis=w_ax))
+            return np.asarray(leaf) if ax >= 0 else ph
+
+        snap = jax.tree.map(trim, src, self.paged_axes, self.pspec)
+        # committed counters restart at 0 on resume (scheduler convention:
+        # _prev_new = 0, budget rebased to the remaining tokens) — the
+        # budget arithmetic is shift-invariant, so tokens are unchanged
+        snap["new_count"] = np.zeros_like(snap["new_count"])
+        snap["slot_iters"] = np.zeros_like(snap["slot_iters"])
+        nbytes = sum(leaf.nbytes for leaf in jax.tree.leaves(snap))
+        h = _SwapHandle(snap=snap, page_row=list(pages), host_idx=host_idx,
+                        last=int(snap["last"][0]),
+                        sampled=self._slot_sampled[slot], nbytes=nbytes)
+        if not self.host_pool.put(rid, h, nbytes):
+            return state, False
+        # release only the exclusive pages; the handle keeps the slot's
+        # reference on the shared remainder (pinning it against eviction)
+        self.allocator.free([pages[i] for i in host_idx])
+        self._slot_pages[slot] = []
+        self._slot_sampled[slot] = False
+        self.swap_last_bytes = nbytes
+        return self._paged_free(state, jnp.asarray(slot, jnp.int32)), True
+
+    def has_swap(self, rid) -> bool:
+        """Whether a host snapshot is parked under ``rid``."""
+        return self.swap_enabled and rid in self.host_pool
+
+    def can_swap_in(self, rid, prompt_len: Optional[int] = None,
+                    max_new: Optional[int] = None,
+                    full: bool = False) -> bool:
+        """Admission gate for a swapped resume, priced at its DEVICE-page
+        need only: the handle's host pages want fresh device pages; its
+        resident pages are already on device. ``full`` (the scheduler's
+        anti-thrash re-admission gate) additionally covers the remaining
+        lifetime growth beyond what the restore maps, mirroring
+        ``can_admit(full=True)`` for recompute resumes."""
+        h = self.host_pool.get(rid) if self.swap_enabled else None
+        if h is None:
+            return False
+        need = len(h.host_idx)
+        if full and prompt_len is not None:
+            need += max(0, self.pages_needed(prompt_len, max_new)
+                        - len(h.page_row))
+        avail = self.allocator.n_free
+        if self.prefix_cache is not None:
+            avail += self.prefix_cache.evictable(self.allocator, h.page_row)
+        return need <= avail
+
+    def swap_in_slot(self, state: dict, slot: int, rid):
+        """Resume a swapped-out request into (empty) ``slot``: allocate
+        fresh device pages for the host spans, rebuild the full-width
+        batch-1 view around the host payload, and scatter it back with the
+        still-resident pages masked out of the write. Returns ``(state,
+        last)`` — the restored committed position; the slot then holds
+        BITWISE the state it had at eviction (device→host→device
+        round-trips preserve bytes, and resident pages were never
+        touched). Callers gate on ``can_swap_in``."""
+        h = self.host_pool.get(rid) if self.swap_enabled else None
+        if h is None:
+            raise KeyError(f"no swap handle for request {rid!r}")
+        if self._slot_pages[slot]:
+            raise RuntimeError(f"slot {slot} still holds pages; "
+                               "free_slot it before swap-in")
+        fresh = self._alloc_pages(len(h.host_idx)) if h.host_idx else []
+        if fresh is None:
+            raise RuntimeError(
+                f"page pool exhausted ({len(h.host_idx)} needed, "
+                f"{self.allocator.n_free} free); gate on can_swap_in")
+        pages = list(h.page_row)
+        scat = np.full((self.pages_per_slot,), -1, np.int32)
+        for i, p in zip(h.host_idx, fresh):
+            pages[i] = p
+            scat[i] = p
+        row = np.full((self.pages_per_slot,), -1, np.int32)
+        row[:len(pages)] = pages
+        src = self._swap_src(h)
+        state = self._swap_scatter(state, src, jnp.asarray(slot, jnp.int32),
+                                   jnp.asarray(row), jnp.asarray(scat))
+        self._slot_pages[slot] = pages
+        self._slot_sampled[slot] = h.sampled
+        self.host_pool.pop(rid)
+        self.swap_last_bytes = h.nbytes
+        return state, h.last
+
+    def _swap_src(self, h: _SwapHandle) -> dict:
+        """Full-width batch-1 state around the handle's payload: per-slot
+        rows verbatim, paged views zero-filled except the host spans
+        (swap-in's scatter mask drops everything else, so the fill value
+        is never read), leaves write_slot ignores zero-filled for shape."""
+        ps = self.ecfg.page_size
+        span = (self._host_span(h.host_idx, ps) if h.host_idx else None)
+
+        def build(t, s, ax, tag):
+            if tag != cache_ops.NOT_PAGED:
+                full = np.zeros(t.shape, t.dtype)
+                if span is not None:
+                    sl = [slice(None)] * len(t.shape)
+                    sl[cache_ops.view_width_axis(len(t.shape), tag)] = span
+                    full[tuple(sl)] = s
+                return full
+            if ax < 0:
+                return np.zeros(t.shape, t.dtype)
+            return s
+
+        return jax.tree.map(build, self._b1_template(), h.snap,
+                            self.paged_axes, self.pspec)
+
+    def drop_swap(self, rid) -> bool:
+        """Release ``rid``'s host snapshot without resuming it: frees the
+        host-pool bytes immediately and drops the handle's reference on
+        its resident pages (abort of a swapped request, or the scheduler
+        falling a swapped resume back to recompute-prefill). False when
+        nothing was parked."""
+        if not self.has_swap(rid):
+            return False
+        h = self.host_pool.pop(rid)
+        on_host = set(h.host_idx)
+        resident = [p for i, p in enumerate(h.page_row) if i not in on_host]
+        if resident:
+            self.allocator.free(resident)
+        return True
+
+    def reset_stats(self) -> None:
+        """Restart the allocator's and host pool's ``peak_used`` high-water
+        marks at current usage — multi-phase benchmarks (tables 13/19)
+        call this between warm-up and measured passes so each phase
+        reports its own honest peak."""
+        if self.paged:
+            self.allocator.reset_stats()
+        if self.host_pool is not None:
+            self.host_pool.reset_stats()
 
     def _mixed_policy(self) -> bool:
         """Whether the next step needs the sampled verification lane: any

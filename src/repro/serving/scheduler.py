@@ -59,7 +59,12 @@ recomputed prefix (the resume prefill rebuilds the eviction's exact
 step-boundary state and commits nothing new; serving/sampling.py).
 tests/test_async_serving.py pins both, per family. Re-admission of a
 preempted request gates on its *full* remaining need so the same pressure
-cannot immediately re-evict it.
+cannot immediately re-evict it. With ``EngineConfig(swap="host")`` an
+eviction instead parks the victim's pages + per-slot rows in a host-side
+pool and the resume is a bitwise device scatter (no prefill re-paid); the
+scheduler falls back to recompute-prefill per eviction whenever the host
+pool is full or the bytes-moved cost model says recompute is cheaper —
+see the ``swap`` knobs below, tests/test_swap.py, and docs/serving.md.
 
 Row independence is the correctness backbone: attention, cache updates, and
 verification are all per-row, so admitting into slot *i* cannot change what
@@ -156,6 +161,8 @@ class Request:                # arrays, and membership tests (abort from
     vt_admit: Optional[float] = None   # virtual clock at first admission
     vt_finish: float = 0.0
     n_preempt: int = 0
+    n_swap: int = 0                # preemptions that swapped to host (the
+    #                                rest resumed by recompute-prefill)
     iters: int = 0                 # decode iterations this request was live
     cached_tokens: int = 0         # prompt positions served from the prefix
     #                                cache across all admissions (0 = cold)
@@ -215,6 +222,22 @@ class Scheduler:
     exact step boundary the eviction stopped at). ``preempt=False`` stalls
     slots on pool exhaustion instead.
 
+    ``swap`` — swap-to-host preemption (defaults to the engine's
+    ``EngineConfig(swap=...)`` setting): an eviction copies the victim's
+    pages + per-slot rows to the engine's host pool and the resume becomes
+    a device scatter (``Engine.swap_in_slot``) instead of a
+    recompute-prefill — bitwise the eviction-time state, so streams are
+    unchanged. Per eviction the scheduler picks swap only when the
+    bytes-moved cost model says it beats recomputing the prefix —
+    ``2 * bytes * swap_cost_per_byte <= prefill_cost +
+    prefill_cost_per_token * prefix_tokens`` — AND the host pool can hold
+    the snapshot; otherwise (host pool exhausted, or short cheap prefixes)
+    it falls back to recompute-prefill, losslessly. ``swap_cost_per_byte``
+    / ``prefill_cost_per_token`` extend the virtual clock the same way:
+    swap-out/in advance it by bytes moved, admission prefills by
+    ``prefill_cost + per-token * prefix`` (both default 0.0 extra —
+    existing traces replay bitwise).
+
     ``adaptive_k`` — per-request dynamic draft length
     (serving/speculation.py): ``True`` enables the
     :class:`SpeculationController` with default knobs, a
@@ -233,7 +256,10 @@ class Scheduler:
                  free_on_finish: bool = True, sync_every: int = 1,
                  iter_cost: float = 1.0, prefill_cost: float = 1.0,
                  preempt: Optional[bool] = None,
-                 adaptive_k: Any = None):
+                 adaptive_k: Any = None,
+                 swap: Optional[bool] = None,
+                 swap_cost_per_byte: float = 0.0,
+                 prefill_cost_per_token: float = 0.0):
         self.engine = engine
         self.eos_id = eos_id
         self.free_on_finish = free_on_finish
@@ -241,6 +267,12 @@ class Scheduler:
         self.iter_cost = float(iter_cost)
         self.prefill_cost = float(prefill_cost)
         self.preempt = True if preempt is None else bool(preempt)
+        self.swap = (engine.swap_enabled if swap is None else bool(swap))
+        if self.swap and not engine.swap_enabled:
+            raise ValueError(
+                "Scheduler(swap=True) needs EngineConfig(swap='host')")
+        self.swap_cost_per_byte = float(swap_cost_per_byte)
+        self.prefill_cost_per_token = float(prefill_cost_per_token)
         if adaptive_k is None or adaptive_k is False:
             self.spec: Optional[SpeculationController] = None
         elif isinstance(adaptive_k, SpeculationController):
@@ -290,6 +322,11 @@ class Scheduler:
         self._clock = 0.0
         self._n_iters = 0
         self._n_preempt = 0
+        self._n_swap = 0            # swap-to-host evictions
+        self._n_recompute = 0       # recompute-prefill evictions
+        self._n_swap_drop = 0       # handles dropped for pressure relief
+        self._recomputed_tokens = 0  # prefix tokens re-fed by resume
+        #                              prefills (net of prefix-cache hits)
         self._next_seq = 0
         self._wall_t0 = None        # None → virtual clock (_advance adds)
         self._t_start = time.perf_counter()
@@ -404,6 +441,9 @@ class Scheduler:
                 self._state, s, final_tokens=self._committed_stream(req))
         elif req in self._waiting:
             self._waiting.remove(req)
+        # a swapped-out request holds host-pool bytes (and resident page
+        # references) while queued — release them NOW, not at drain
+        self.engine.drop_swap(req.rid)
         req.status = ABORTED
         req.slot = None
         req.t_finish = time.perf_counter()
@@ -414,11 +454,38 @@ class Scheduler:
         self._event("abort", req.rid)
         return True
 
+    def _swap_beats_recompute(self, req: Request, s: int) -> bool:
+        """Swap-vs-recompute policy for evicting slot ``s``: swap when the
+        virtual cost of moving the snapshot's bytes BOTH ways is at most
+        the cost of re-feeding the committed prefix through a resume
+        prefill, and the host pool can actually hold it. With the default
+        zero byte cost, swap always wins while the host pool has room —
+        the cost model only bites once ``swap_cost_per_byte`` /
+        ``prefill_cost_per_token`` are calibrated (table 19 does)."""
+        eng = self.engine
+        if not self.swap:
+            return False
+        est = eng.swap_bytes_estimate(s)
+        if not eng.host_pool.can_store(est):
+            return False        # host pool exhausted → recompute fallback
+        prefix = req.prompt.size + len(req.out_tokens)
+        return (2.0 * est * self.swap_cost_per_byte
+                <= self.prefill_cost
+                + self.prefill_cost_per_token * prefix)
+
     def _preempt_slot(self, s: int) -> None:
-        """Evict slot s: pages freed, prompt + generated tokens retained
-        host-side; the request re-enters the queue at its original
-        priority for a recompute-prefill resume."""
+        """Evict slot s, re-queueing the request at its original priority.
+        Two disciplines: swap-to-host (state parked in the engine's host
+        pool, resume is a device scatter) when enabled and worth it under
+        the bytes-vs-tokens cost model, else recompute-prefill (pages
+        freed, prompt + generated tokens retained host-side, prefix
+        re-fed at resume). Both are token-for-token lossless; the swap
+        path additionally skips re-paying the prefill FLOPs."""
+        eng = self.engine
         req = self._slot_req[s]
+        swapped = False
+        if self._swap_beats_recompute(req, s):
+            self._state, swapped = eng.swap_out_slot(self._state, s, req.rid)
         req.status = QUEUED
         req.slot = None
         req.n_preempt += 1
@@ -426,10 +493,36 @@ class Scheduler:
         self._n_preempt += 1
         self._active[s] = False
         self._slot_req[s] = None
-        self._state = self.engine.free_slot(
-            self._state, s, final_tokens=self._committed_stream(req))
+        if swapped:
+            req.n_swap += 1
+            self._n_swap += 1
+            self._advance(self.swap_cost_per_byte * eng.swap_last_bytes)
+            self._event("swap_out", req.rid)
+        else:
+            self._n_recompute += 1
+            self._state = eng.free_slot(
+                self._state, s, final_tokens=self._committed_stream(req))
+            self._event("preempt", req.rid)
         bisect.insort(self._waiting, req, key=self._prio)
-        self._event("preempt", req.rid)
+
+    def _drop_one_swap(self, exclude: Optional[Request] = None) -> bool:
+        """Pressure relief of last resort. A swap handle pins its resident
+        (cache-shared) pages at refcount >= 2, where a recompute eviction
+        would have left them evictable — so a device pool wedged behind
+        swapped prefixes must degrade to the recompute discipline, never
+        deadlock: drop the LOWEST-priority swapped handle (that request
+        resumes by recompute-prefill, still lossless) and let the caller
+        re-try admission/growth. Returns False when nothing is droppable."""
+        eng = self.engine
+        cands = [r for r in self._waiting
+                 if r is not exclude and eng.has_swap(r.rid)]
+        if not cands:
+            return False
+        victim = max(cands, key=self._prio)
+        eng.drop_swap(victim.rid)
+        self._n_swap_drop += 1
+        self._event("swap_drop", victim.rid)
+        return True
 
     def _lowest_prio_active(self) -> Optional[int]:
         live = [s for s in range(self.engine.batch) if self._active[s]]
@@ -450,6 +543,12 @@ class Scheduler:
         eng = self.engine
         plen = req.prompt.size + len(req.out_tokens)
         rem = req.max_new_tokens - len(req.out_tokens)
+        if eng.has_swap(req.rid):
+            # swapped resume: priced at its DEVICE-page need only — fresh
+            # pages for the host spans (+ remaining lifetime growth under
+            # the full gate); resident pages are already on device
+            return eng.can_swap_in(req.rid, plen, rem,
+                                   full=req.n_preempt > 0)
         stream = req.prompt
         resume = False
         if req.out_tokens:
@@ -487,8 +586,32 @@ class Scheduler:
         req._scanned = len(out)
         return done
 
+    def _swap_admit(self, req: Request, s: int) -> None:
+        """Resume a swapped-out request: scatter its host snapshot back
+        into (empty) slot ``s`` — no prefill, no re-sampling, the restored
+        state is bitwise the eviction-time step boundary for every
+        decoding policy. Mirrors the resume conventions of ``_admit``:
+        committed counters restart at 0 against the remaining budget."""
+        eng = self.engine
+        remaining = req.max_new_tokens - len(req.out_tokens)
+        req.status = PREFILLING
+        req.slot = s
+        self._state, last = eng.swap_in_slot(self._state, s, req.rid)
+        self._advance(self.swap_cost_per_byte * eng.swap_last_bytes)
+        self._event("swap_in", req.rid)
+        req._prev_new, req._prev_last = 0, last
+        req.status = DECODING
+        self._slot_req[s] = req
+        self._active[s] = True
+        self._max_new[s] = remaining
+        if self.spec is not None:
+            self._k_row[s] = self.spec.k_for(req.rid)
+
     def _admit(self, req: Request, s: int) -> None:
         eng = self.engine
+        if eng.has_swap(req.rid):
+            self._swap_admit(req, s)
+            return
         # recompute-prefill resume: the prefix is prompt + everything
         # generated before eviction. Greedy continuation from that
         # prefix is exactly the uninterrupted stream (the prefill's
@@ -531,7 +654,13 @@ class Scheduler:
             # admission-decision timestamp)
             req.t_admit = time.perf_counter()
         req.cached_tokens += eng.last_hit_tokens
-        self._advance(self.prefill_cost)
+        if req.n_preempt:
+            # prefix positions this resume actually re-forwarded (net of
+            # prefix-cache hits) — the FLOP bill swap-to-host avoids
+            self._recomputed_tokens += max(
+                int(prompt.size) - eng.last_hit_tokens, 0)
+        self._advance(self.prefill_cost
+                      + self.prefill_cost_per_token * int(prompt.size))
         if first is None:               # no-commit resume (sampled)
             req._prev_new, req._prev_last = 0, last
         else:
@@ -575,6 +704,15 @@ class Scheduler:
                                          <= self._prio(head)):
                             break
                         self._preempt_slot(v)
+                # swap handles pin resident pages a recompute eviction
+                # would have released — drop lower-priority handles until
+                # the head fits, so swap can only ever ADD admissible
+                # schedules, never wedge one. (Dropping the head's OWN
+                # handle never helps: a swapped resume needs at most the
+                # pages its recompute twin would, so it stays excluded.)
+                while (not self._head_admissible(head)
+                       and self._drop_one_swap(exclude=head)):
+                    pass
                 if not self._head_admissible(head):
                     break                # head waits for frees (FIFO)
             self._admit(self._waiting.pop(0), free[0])
@@ -617,6 +755,12 @@ class Scheduler:
                     self._preempt_slot(v)
                     if v == s:
                         break
+                    self._state, ok = eng.ensure_capacity(self._state,
+                                                          int(s), target)
+                while not ok and self._active[s] \
+                        and self._drop_one_swap():
+                    # growth wedged behind handle-pinned pages: fall
+                    # swapped waiters back to recompute and retry
                     self._state, ok = eng.ensure_capacity(self._state,
                                                           int(s), target)
                 if not ok and self._active[s]:
@@ -769,6 +913,7 @@ class Scheduler:
             "acceptance_length": r.acceptance_length,
             "arrival_time": r.arrival_time,
             "n_preempt": r.n_preempt,
+            "n_swap": r.n_swap,
             "cached_tokens": r.cached_tokens,
             "aborted": r.status == ABORTED,
             "wait_s": r.t_admit - r.t_submit,
@@ -793,6 +938,7 @@ class Scheduler:
         done_reqs = [r for r in finished if r.status == FINISHED]
         dec_tok = sum(r._committed - r._prefills for r in done_reqs)
         dec_it = sum(r.iters for r in done_reqs)
+        hp = self.engine.host_pool            # None unless swap="host"
         return {
             "results": results,
             "n_requests": len(results),
@@ -811,6 +957,25 @@ class Scheduler:
             "makespan_vt": makespan_vt,
             "otps_vt": total / max(makespan_vt, 1e-9),
             "preemptions": n_preempt,
+            # preemption-kind split (honest degradation accounting): every
+            # eviction is exactly one of swap-to-host or recompute-prefill;
+            # swap_drops counts handles later demoted to recompute under
+            # pressure relief, and recomputed_prefill_tokens is the prefix
+            # FLOP bill the recompute resumes actually re-paid
+            "preempt_swap": self._n_swap,
+            "preempt_recompute": self._n_recompute,
+            "swap_drops": self._n_swap_drop,
+            "recomputed_prefill_tokens": self._recomputed_tokens,
+            "host_pool": {
+                # `is not None`: an empty HostPagePool is falsy (__len__)
+                "capacity_bytes": hp.capacity if hp is not None else 0,
+                "used_bytes": hp.used_bytes if hp is not None else 0,
+                "peak_bytes": hp.peak_used if hp is not None else 0,
+            },
+            # device-pool high-water mark (0 for contiguous engines) — read
+            # AFTER Engine.reset_stats() between phases for per-phase peaks
+            "peak_pages": (self.engine.allocator.peak_used
+                           if self.engine.paged else 0),
             "aborted": len(results) - len(done),
             # prefix-cache effectiveness (0s on cache-off engines)
             "cache_hit_tokens": sum(r["cached_tokens"] for r in results),

@@ -31,7 +31,10 @@ Streaming semantics:
 - ``abort()`` (or closing a ``generate()`` iterator early) cancels a
   request immediately: a queued request leaves the wait queue; a running
   one's pages return to the pool via the ordinary ``free_slot`` path
-  before the next sync, so the slot is reusable at once.
+  before the next sync, so the slot is reusable at once. Aborting a
+  swapped-out request (``EngineConfig(swap="host")``) additionally frees
+  its host bytes right away — the HostPagePool never holds state for a
+  dead request.
 - Backpressure: at most ``max_pending`` requests may be in flight
   (queued + running); ``submit()``/``generate()`` await a free admission
   ticket. ``health()`` reports queue depth, running slots, pool occupancy
@@ -289,6 +292,7 @@ class AsyncEngine:
 
         pool_total = eng.pool_pages if eng.paged else 0
         pool_free = eng.allocator.n_free if eng.paged else 0
+        hp = eng.host_pool               # None unless swap="host"
         return {
             "queue_depth": len(sched._waiting),
             "running": int(sched._active.sum()),
@@ -299,6 +303,15 @@ class AsyncEngine:
             "pool_free": pool_free,
             "pool_occupancy": (1.0 - pool_free / pool_total
                                if pool_total else 0.0),
+            # host swap pool (all zeros unless EngineConfig(swap="host");
+            # `is not None` because an empty HostPagePool is falsy)
+            "swapped": len(hp) if hp is not None else 0,
+            "host_pool_bytes": hp.capacity if hp is not None else 0,
+            "host_pool_used_bytes": hp.used_bytes if hp is not None else 0,
+            "host_pool_peak_bytes": hp.peak_used if hp is not None else 0,
+            "host_pool_occupancy": (hp.used_bytes / hp.capacity
+                                    if hp is not None and hp.capacity
+                                    else 0.0),
             "finished": len(completed),
             "aborted": len(sched._finished) - len(completed),
             "preemptions": sched._n_preempt,

@@ -1,0 +1,451 @@
+"""Swap-to-host preemption property suite (the SWAPPED page-lifecycle
+state: cache_ops.HostPagePool + Engine.swap_out_slot/swap_in_slot +
+scheduler policy/fallback wiring).
+
+The acceptance pins:
+
+- **bitwise restore**: swap-out parks a victim's device state (all KV
+  leaves + recurrent stream state + sampling/logprob rows) in a host pool
+  and swap-in scatters it back byte-for-byte, so a swapped-and-resumed
+  request emits token-for-token — bitwise for seeded-sampled rows — what
+  BOTH the never-preempted run and the recompute-prefill resume emit, for
+  dense/SSM/hybrid, single-device and model-sharded (mesh {1,4,8};
+  swap requires the paged layout, so kv_layout is pinned there);
+- **dual-pool hygiene**: randomized admit/swap/recompute/abort churn
+  leaves zero leaked or aliased pages in the DEVICE pool and zero leaked
+  bytes/handles in the HOST pool (the fault-injection suite: a tiny
+  ``host_pool_bytes`` budget injects swap-out failures mid-churn);
+- **graceful degradation**: when the host pool can't take a snapshot,
+  preemption falls back to recompute-prefill losslessly — no crash, no
+  stall — and the report counts both preemption kinds honestly
+  (``preemptions == preempt_swap + preempt_recompute``);
+- **immediate reclamation**: aborting a swapped request frees its host
+  bytes right away (streaming ``abort()``), and ``health()`` exposes
+  host-pool occupancy;
+- **honest peaks**: the host pool's ``peak_used`` high-water mark feeds
+  scheduler reports and resets with ``Engine.reset_stats`` so
+  tables 13/19 compare warm-up and measured phases honestly.
+"""
+from functools import lru_cache
+
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving import (AsyncEngine, Engine, EngineConfig, HostPagePool,
+                           Request, SamplingParams, Scheduler)
+from repro.sharding.utils import serving_mesh
+
+from conftest import require_devices  # noqa: E402  (tests dir on sys.path)
+from test_async_serving import (FAMILY_ARCHS, _setup, assert_pool_drained,
+                                churn_workload, get_engine, solo_tokens)
+
+
+@lru_cache(maxsize=None)
+def get_swap_engine(family="dense", pool_pages=0, host_bytes=0, batch=2,
+                    shard=0, prefix_cache=False):
+    """Paged engine with swap-to-host preemption; same reduced geometry as
+    test_async_serving.get_engine so solo references are interchangeable."""
+    tcfg, dcfg, tparams, dparams = _setup(family)
+    return Engine(tcfg, dcfg, tparams, dparams,
+                  EngineConfig(K=2, max_new_tokens=16,
+                               drafter_mode="parallel", max_len=64,
+                               kv_layout="paged", page_size=8,
+                               pool_pages=pool_pages,
+                               kv_growth="incremental",
+                               swap="host", host_pool_bytes=host_bytes,
+                               prefix_cache=prefix_cache,
+                               shard_model=shard > 0,
+                               mesh=serving_mesh(shard) if shard else None),
+                  batch)
+
+
+def assert_both_pools_drained(eng):
+    assert_pool_drained(eng)
+    assert len(eng.host_pool) == 0, "host pool still holds a snapshot"
+    assert eng.host_pool.used_bytes == 0, "host bytes leaked"
+
+
+def solo_sampled(eng, prompt, budget, sp):
+    rep = Scheduler(eng).serve([Request(prompt, max_new_tokens=budget,
+                                        sampling=sp)])
+    return rep["results"][0]
+
+
+def preempt_workload(seed=3):
+    """The tight-pool forcing mix the recompute-preemption tests use: pool
+    of 5 pages fits both initial claims but not both full-grown requests."""
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(1, 200, size=6).astype(np.int32)
+               for _ in range(3)]
+    return prompts, [14, 14, 8]
+
+
+# ---------------------------------------------------------------------------
+# HostPagePool unit behavior
+# ---------------------------------------------------------------------------
+
+def test_host_page_pool_accounting():
+    hp = HostPagePool(100)
+    assert hp.can_store(100) and not hp.can_store(101)
+    assert hp.put("a", "h1", 60)
+    assert "a" in hp and len(hp) == 1
+    assert hp.used_bytes == 60 and hp.peak_used == 60
+    assert not hp.put("b", "h2", 50), "over-budget put must refuse"
+    assert "b" not in hp and hp.used_bytes == 60, "refused put stored bytes"
+    with pytest.raises(ValueError):
+        hp.put("a", "dup", 1)            # double snapshot = lost resume
+    assert hp.pop("a") == "h1"
+    assert hp.used_bytes == 0 and hp.peak_used == 60, \
+        "pop must release bytes but keep the high-water mark"
+    with pytest.raises(KeyError):
+        hp.pop("a")                      # double-free raises, like the
+    assert hp.get("a") is None           # BlockAllocator
+    hp.reset_stats()
+    assert hp.peak_used == 0
+    unbounded = HostPagePool(0)
+    assert unbounded.can_store(10 ** 12)
+    with pytest.raises(ValueError):
+        HostPagePool(-1)
+
+
+def test_swap_config_validation():
+    tcfg, dcfg, tparams, dparams = _setup("dense")
+    with pytest.raises(ValueError, match="paged"):
+        Engine(tcfg, dcfg, tparams, dparams,
+               EngineConfig(K=2, max_new_tokens=8, drafter_mode="parallel",
+                            max_len=64, swap="host"), 2)
+    with pytest.raises(ValueError):
+        Engine(tcfg, dcfg, tparams, dparams,
+               EngineConfig(K=2, max_new_tokens=8, drafter_mode="parallel",
+                            max_len=64, kv_layout="paged", page_size=8,
+                            swap="disk"), 2)
+
+
+# ---------------------------------------------------------------------------
+# engine-level bitwise roundtrip
+# ---------------------------------------------------------------------------
+
+def test_swap_roundtrip_restores_slot_bitwise():
+    """swap_out → swap_in restores the slot's gathered view byte-for-byte
+    (device→host→device copies preserve bytes; fresh page ids differ but
+    the block-table view is identical), except the committed counters,
+    which the snapshot zeroes to the scheduler's resume convention."""
+    from repro.serving import cache_ops
+
+    eng = get_swap_engine("dense", pool_pages=6)
+    state = eng.blank_state()
+    prompt = np.arange(1, 7, dtype=np.int32)
+    state, _, _ = eng.prefill_into_slot(state, prompt, 0, max_new=8)
+    # compare only the slot's CLAIMED span: the block-table row's -1 tail
+    # clips to physical page 0 in the gather, whose identity legitimately
+    # changes when swap-in re-allocates pages in a different order (its
+    # positions are forced -1, so it is never attendable history)
+    valid = np.arange(len(eng._slot_pages[0]) * eng.ecfg.page_size)
+
+    def view(state):
+        raw = jax.device_get(eng._swap_gather(
+            state, jnp.asarray(0, jnp.int32), state["block_table"][0]))
+
+        def clip(leaf, tag):
+            if tag == cache_ops.NOT_PAGED:
+                return leaf
+            return np.take(leaf, valid,
+                           axis=cache_ops.view_width_axis(leaf.ndim, tag))
+
+        return jax.tree.map(clip, raw, eng.pspec)
+
+    before = view(state)
+    nbytes_est = eng.swap_bytes_estimate(0)
+    state, ok = eng.swap_out_slot(state, 0, rid="r0")
+    assert ok
+    assert eng.swap_last_bytes == nbytes_est, \
+        "swap_bytes_estimate must price exactly what swap-out stores"
+    assert not eng._slot_pages[0] and eng.has_swap("r0")
+    assert eng.host_pool.used_bytes == nbytes_est
+    assert eng.can_swap_in("r0")
+    state, last = eng.swap_in_slot(state, 0, "r0")
+    after = view(state)
+    assert int(before["last"][0]) == last
+    want = dict(before)
+    want["new_count"] = np.zeros_like(want["new_count"])
+    want["slot_iters"] = np.zeros_like(want["slot_iters"])
+    got_leaves = jax.tree_util.tree_flatten_with_path(after)[0]
+    want_leaves = jax.tree.leaves(want)
+    assert len(got_leaves) == len(want_leaves)
+    for (path, got), exp in zip(got_leaves, want_leaves):
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(exp),
+            err_msg=f"leaf {jax.tree_util.keystr(path)} not restored "
+                    "bitwise")
+    assert len(eng.host_pool) == 0 and eng.host_pool.used_bytes == 0
+    state = eng.free_slot(state, 0)
+    assert_both_pools_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# lossless swap-resume, per family (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_swap_resume_equals_solo_and_recompute(family):
+    """A swapped-and-resumed request emits the exact token (and logprob)
+    sequence of BOTH the uninterrupted solo run and the recompute-prefill
+    resume — for SSM/hybrid this is the cheap-resume path the prefix cache
+    can't give them (the whole recurrent stream state swaps with the
+    slot)."""
+    eng = get_swap_engine(family, pool_pages=5)
+    ref = get_engine(family, pool_pages=5)         # recompute twin
+    prompts, budgets = preempt_workload()
+
+    def reqs():
+        return [Request(p, max_new_tokens=b)
+                for p, b in zip(prompts, budgets)]
+
+    rep = Scheduler(eng).serve(reqs())
+    assert rep["preempt_swap"] >= 1, "workload was meant to force a swap"
+    assert rep["preemptions"] == (rep["preempt_swap"]
+                                  + rep["preempt_recompute"])
+    assert rep["recomputed_prefill_tokens"] == 0, \
+        "swap resumes must not recompute any prefill tokens"
+    assert rep["host_pool"]["peak_bytes"] > 0, \
+        "a swap happened but the report shows no host high-water mark"
+    assert any(r["n_swap"] > 0 for r in rep["results"])
+    rep_rc = Scheduler(ref).serve(reqs())
+    assert rep_rc["preemptions"] >= 1
+    for res, rc, p, b in zip(rep["results"], rep_rc["results"],
+                             prompts, budgets):
+        solo = solo_sampled(ref, p, b, None)
+        np.testing.assert_array_equal(
+            res["tokens"], solo["tokens"],
+            err_msg=f"{family}: rid {res['rid']} diverged from solo")
+        # swap restores the eviction state bitwise, so even the logprobs
+        # continue exactly as the uninterrupted run's
+        np.testing.assert_array_equal(res["logprobs"], solo["logprobs"])
+        np.testing.assert_array_equal(res["tokens"], rc["tokens"])
+        # the recompute twin re-derives resume logits through a bucketed
+        # prefill — same tokens, logprobs equal only to float tolerance
+        np.testing.assert_allclose(res["logprobs"], rc["logprobs"],
+                                   rtol=1e-5, atol=1e-6)
+    assert_both_pools_drained(eng)
+    assert_pool_drained(ref)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_sampled_swap_resume_bitwise(family):
+    """Seeded-sampled rows restore bitwise: swap-in rebuilds the sampling
+    state (keys, logprob accumulators) byte-for-byte, so the resumed rows
+    replay the uninterrupted draw exactly — stronger than the recompute
+    path, which relies on the fold_in(seed, position) replay invariant."""
+    eng = get_swap_engine(family, pool_pages=5)
+    prompts, budgets = preempt_workload()
+    sps = [SamplingParams(temperature=0.8, seed=100 + i) for i in range(3)]
+    rep = Scheduler(eng).serve(
+        [Request(p, max_new_tokens=b, sampling=sp)
+         for p, b, sp in zip(prompts, budgets, sps)])
+    assert rep["preempt_swap"] >= 1, "workload was meant to force a swap"
+    for res, p, b, sp in zip(rep["results"], prompts, budgets, sps):
+        solo = solo_sampled(eng, p, b, sp)
+        np.testing.assert_array_equal(
+            res["tokens"], solo["tokens"],
+            err_msg=f"{family}: sampled rid {res['rid']} diverged")
+        np.testing.assert_array_equal(res["logprobs"], solo["logprobs"])
+    assert_both_pools_drained(eng)
+
+
+@pytest.mark.parametrize("family,shard", [
+    ("dense", 4),
+    pytest.param("ssm", 4, marks=pytest.mark.slow),
+    pytest.param("hybrid", 4, marks=pytest.mark.slow),
+    pytest.param("dense", 8, marks=pytest.mark.slow),
+])
+def test_sharded_sampled_swap_resume_matches_single_device(family, shard):
+    """The mesh pin: on {4,8} forced host devices the swap gather/scatter
+    cross the storage-sharded page pools, and the seeded-sampled streams
+    must still match the single-device engine bitwise (mesh 1 is
+    test_sampled_swap_resume_bitwise)."""
+    require_devices(shard)
+    eng = get_swap_engine(family, pool_pages=5, shard=shard)
+    ref = get_engine(family, pool_pages=5)         # single-device twin
+    prompts, budgets = preempt_workload()
+    sps = [SamplingParams(temperature=0.8, seed=100 + i) for i in range(3)]
+    rep = Scheduler(eng).serve(
+        [Request(p, max_new_tokens=b, sampling=sp)
+         for p, b, sp in zip(prompts, budgets, sps)])
+    assert rep["preempt_swap"] >= 1, "workload was meant to force a swap"
+    for res, p, b, sp in zip(rep["results"], prompts, budgets, sps):
+        solo = solo_sampled(ref, p, b, sp)
+        np.testing.assert_array_equal(
+            res["tokens"], solo["tokens"],
+            err_msg=f"{family}@mesh{shard}: rid {res['rid']} diverged "
+                    "from the single-device stream")
+        np.testing.assert_array_equal(res["logprobs"], solo["logprobs"])
+    assert_both_pools_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# host-pool exhaustion: graceful, honest degradation
+# ---------------------------------------------------------------------------
+
+def test_host_pool_exhaustion_falls_back_to_recompute():
+    """With a host budget too small for any snapshot, every preemption
+    falls back to recompute-prefill: no crash, no stall, streams still
+    lossless, and the report splits the preemption kinds honestly."""
+    eng = get_swap_engine("dense", pool_pages=5, host_bytes=64)
+    ref = get_engine("dense", pool_pages=5)
+    prompts, budgets = preempt_workload()
+    rep = Scheduler(eng).serve([Request(p, max_new_tokens=b)
+                                for p, b in zip(prompts, budgets)])
+    assert rep["preemptions"] >= 1, "workload was meant to force eviction"
+    assert rep["preempt_swap"] == 0, "64 bytes cannot hold a snapshot"
+    assert rep["preempt_recompute"] == rep["preemptions"]
+    assert rep["recomputed_prefill_tokens"] > 0
+    assert rep["host_pool"]["peak_bytes"] == 0
+    assert rep["host_pool"]["capacity_bytes"] == 64
+    for res, p, b in zip(rep["results"], prompts, budgets):
+        np.testing.assert_array_equal(
+            res["tokens"], solo_tokens(ref, p, b),
+            err_msg=f"fallback rid {res['rid']} diverged")
+    assert_both_pools_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# fault-injection churn: randomized admit/swap/recompute/abort cycles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+@settings(max_examples=2, deadline=None)
+@given(n=st.integers(1, 4), seed=st.integers(0, 2 ** 31 - 1))
+def test_swap_churn_hygiene_and_losslessness(family, n, seed):
+    """Random arrival/length/budget workloads over a tight pool with swap
+    enabled (unbounded host budget): every grow/swap-out/swap-in/finish
+    cycle leaks and aliases nothing in either pool, budgets are met
+    exactly, and every stream matches its solo run."""
+    eng = get_swap_engine(family, pool_pages=6)
+    reqs = churn_workload(seed, n, max_budget=6)
+    want = [(r.prompt.copy(), r.max_new_tokens) for r in reqs]
+    rep = Scheduler(eng).serve(reqs)
+    assert rep["preemptions"] == (rep["preempt_swap"]
+                                  + rep["preempt_recompute"])
+    assert_both_pools_drained(eng)
+    assert eng.allocator.peak_used <= eng.pool_pages
+    for res, (p, b) in zip(rep["results"], want):
+        assert res["n_new"] == b                # no EOS id ⇒ exact budget
+        np.testing.assert_array_equal(res["tokens"], solo_tokens(eng, p, b))
+    assert_both_pools_drained(eng)
+
+
+@settings(max_examples=3, deadline=None)
+@given(n=st.integers(2, 5), seed=st.integers(0, 2 ** 31 - 1))
+def test_swap_churn_with_tiny_host_pool_mixes_kinds(n, seed):
+    """The fault-injection axis: a host budget that fits roughly ONE
+    snapshot makes swap-out succeed or fail depending on what's already
+    parked, so churn interleaves swap preemptions, recompute fallbacks,
+    and swap drops — hygiene and losslessness must survive the mix."""
+    eng = get_swap_engine("dense", pool_pages=6, host_bytes=60_000)
+    reqs = churn_workload(seed, n, max_budget=6)
+    want = [(r.prompt.copy(), r.max_new_tokens) for r in reqs]
+    rep = Scheduler(eng).serve(reqs)
+    assert rep["preemptions"] == (rep["preempt_swap"]
+                                  + rep["preempt_recompute"])
+    assert rep["host_pool"]["peak_bytes"] <= 60_000, "budget overrun"
+    assert_both_pools_drained(eng)
+    for res, (p, b) in zip(rep["results"], want):
+        np.testing.assert_array_equal(res["tokens"], solo_tokens(eng, p, b))
+    assert_both_pools_drained(eng)
+
+
+def test_swap_composes_with_prefix_cache_shared_pages_stay_resident():
+    """The SWAPPED state composes with refcounts: pages a victim shares
+    with the prefix cache stay resident (the handle pins them), only the
+    refcount==1 remainder moves to the host — and the streams still match
+    a cache-off, swap-off solo run. Identical prompts force sharing."""
+    eng = get_swap_engine("dense", pool_pages=5, prefix_cache=True)
+    ref = get_engine("dense", pool_pages=5)
+    prompt = np.arange(11, 17, dtype=np.int32)
+    budgets = [14, 14, 8]
+    rep = Scheduler(eng).serve([Request(prompt, max_new_tokens=b)
+                                for b in budgets])
+    assert rep["preemptions"] >= 1, "workload was meant to force eviction"
+    for res, b in zip(rep["results"], budgets):
+        np.testing.assert_array_equal(
+            res["tokens"], solo_tokens(ref, prompt, b),
+            err_msg=f"cached swap: rid {res['rid']} diverged")
+    alloc, cache = eng.allocator, eng.prefix_cache
+    assert all(not ps for ps in eng._slot_pages), "slot still holds pages"
+    held = cache.pages()
+    assert len(held) == len(set(held)), "cache aliases a page"
+    assert alloc.n_used == len(held), "page neither free nor cache-held"
+    assert all(alloc.refcount(p) == 1 for p in held), "leaked refcount"
+    assert len(eng.host_pool) == 0 and eng.host_pool.used_bytes == 0
+    cache.flush(alloc)
+    assert_both_pools_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# streaming: abort frees host bytes immediately; health() occupancy
+# ---------------------------------------------------------------------------
+
+def test_abort_swapped_request_frees_host_bytes_immediately():
+    """Aborting a swapped-out request reclaims its host bytes right away
+    (no deferred sweep), health() exposes the host-pool gauges, and the
+    surviving streams still finish losslessly."""
+    eng = get_swap_engine("dense", pool_pages=5, batch=2)
+    ref = get_engine("dense", pool_pages=5)
+    prompts, budgets = preempt_workload()
+
+    async def go():
+        aeng = AsyncEngine(eng)
+        handles = [await aeng.submit(p, max_new_tokens=b)
+                   for p, b in zip(prompts, budgets)]
+        while aeng.health()["swapped"] == 0:
+            assert not all(hd.done for hd in handles), \
+                "session drained without ever swapping a request out"
+            await asyncio.sleep(0.005)
+        h = aeng.health()
+        assert h["swapped"] == 1
+        assert h["host_pool_used_bytes"] > 0
+        assert h["host_pool_peak_bytes"] >= h["host_pool_used_bytes"]
+        assert h["host_pool_bytes"] == 0          # unbounded budget
+        victim = next(hd for hd in handles if eng.has_swap(hd.rid))
+        assert victim.abort()
+        assert eng.host_pool.used_bytes == 0, \
+            "abort must free host bytes immediately"
+        assert aeng.health()["swapped"] == 0
+        survivors = [hd for hd in handles if hd is not victim]
+        outs = []
+        for hd in survivors:
+            toks = [t async for t, _ in hd]
+            outs.append(np.asarray(toks, np.int32))
+        await aeng.close()
+        return [hd.rid for hd in handles].index(victim.rid), outs
+
+    v_idx, outs = asyncio.run(asyncio.wait_for(go(), 300))
+    keep = [i for i in range(len(prompts)) if i != v_idx]
+    for i, got in zip(keep, outs):
+        np.testing.assert_array_equal(
+            got, solo_tokens(ref, prompts[i], budgets[i]),
+            err_msg=f"survivor {i} diverged after a swapped abort")
+    assert_both_pools_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# honest peaks across phases (tables 13/19)
+# ---------------------------------------------------------------------------
+
+def test_reset_stats_covers_both_pools():
+    eng = get_swap_engine("dense", pool_pages=5)
+    prompts, budgets = preempt_workload()
+    rep = Scheduler(eng).serve([Request(p, max_new_tokens=b)
+                                for p, b in zip(prompts, budgets)])
+    assert rep["preempt_swap"] >= 1
+    assert eng.host_pool.peak_used > 0
+    assert eng.allocator.peak_used > 0
+    assert rep["peak_pages"] == eng.allocator.peak_used
+    eng.reset_stats()
+    assert eng.host_pool.peak_used == 0, "drained pool resets to usage"
+    assert eng.allocator.peak_used == eng.allocator.n_used
