@@ -1066,7 +1066,9 @@ def serve_round_based(engine: Engine, prompts: Sequence,
                 nc = np.asarray(state["new_count"])
                 if (nc >= np.asarray(bud))[:n_real].all():
                     break
-        nc = np.asarray(state["new_count"])[:n_real]
+        # nc already holds a post-break readback: the poll loop only exits
+        # through the branch that just refreshed it — don't sync again
+        nc = nc[:n_real]
         toks += int(np.minimum(nc, bud[:n_real]).sum())  # trim overshoot
         al_num += int(np.asarray(state["committed"]))
         al_den += max(int(np.asarray(state["row_iters"])), 1)

@@ -1,0 +1,32 @@
+"""repro-lint: repo-specific static analysis for this codebase's contracts.
+
+The serving stack's guarantees — bitwise losslessness across layouts / mesh /
+preempt-resume, bounded jit retraces, pure ``fold_in`` counter PRNG streams —
+are enforced dynamically by the property suites, which fire only *after* a
+violation lands. The failure modes are mechanical and statically detectable,
+so this package encodes them as AST checkers (stdlib ``ast`` only, no deps):
+
+==========  ===============================================================
+rule        contract
+==========  ===============================================================
+PRNG01      no split-and-carried key streams (``key, sub = split(key)``)
+PRNG02      a consumed PRNG key is never passed to two draw calls
+PRNG03      serving-side key streams derive through a salted ``fold_in``
+SURG01      every decode-state leaf is handled by each surgery surface
+TRACE01     Python bool/str args of jitted functions are marked static
+TRACE02     no host materialization (.item/int/f-string/np) in jitted bodies
+SYNC01      no device-state host syncs outside the harvest boundary
+SHARD01     serving/launch jits pass explicit shardings when a mesh exists
+ALLOC01     no BlockAllocator internals (`_free`/`_ref`) touched outside it
+==========  ===============================================================
+
+Run ``python -m tools.lint`` from the repo root (CI's ``lint`` job does).
+Suppress a finding inline with ``# repro-lint: disable=RULE[,RULE2]`` on the
+offending line (or the line above it); grandfathered findings live in
+``tools/lint/baseline.txt``. See docs/static-analysis.md for the catalog.
+"""
+from tools.lint.core import (Finding, collect_files, lint_file, lint_source,
+                             load_baseline, match_baseline, write_baseline)
+
+__all__ = ["Finding", "collect_files", "lint_file", "lint_source",
+           "load_baseline", "match_baseline", "write_baseline"]

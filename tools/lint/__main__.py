@@ -1,0 +1,93 @@
+"""``python -m tools.lint`` — run repro-lint over the tree.
+
+Exit codes: 0 clean (modulo baseline), 1 new findings or stale baseline
+entries, 2 usage error (refused path, malformed baseline).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List
+
+from tools.lint.core import (Finding, RefusedPath, collect_files,
+                             lint_file, load_baseline, match_baseline,
+                             write_baseline)
+from tools.lint import surgery
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+DEFAULT_PATHS = ["src", "tools"]
+DEFAULT_BASELINE = os.path.join("tools", "lint", "baseline.txt")
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.lint",
+        description="repro-lint: AST checks for this repo's trace/PRNG/"
+                    "state-surgery/sharding contracts "
+                    "(docs/static-analysis.md)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to lint (default: src tools)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline file of grandfathered findings")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignoring the baseline")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from current findings "
+                         "(re-add rationale comments after!)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule IDs to run (default: all)")
+    args = ap.parse_args(argv)
+
+    rules = (set(r.strip() for r in args.rules.split(",") if r.strip())
+             if args.rules else None)
+    paths = args.paths or DEFAULT_PATHS
+
+    try:
+        files = collect_files(paths, ROOT)
+    except RefusedPath as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    findings: List[Finding] = []
+    for path in files:
+        findings.extend(lint_file(path, ROOT, rules))
+    if rules is None or "SURG01" in rules:
+        findings.extend(f for f in surgery.check_repo(ROOT)
+                        if rules is None or f.rule in rules)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+
+    baseline_path = (args.baseline if os.path.isabs(args.baseline)
+                     else os.path.join(ROOT, args.baseline))
+    if args.update_baseline:
+        write_baseline(baseline_path, findings)
+        print(f"wrote {len(set(f.key for f in findings))} entries to "
+              f"{os.path.relpath(baseline_path, ROOT)}")
+        return 0
+
+    if args.no_baseline:
+        entries = []
+    else:
+        try:
+            entries = load_baseline(baseline_path)
+        except ValueError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+    new, stale = match_baseline(findings, entries)
+
+    for f in new:
+        print(f.render())
+    for e in stale:
+        print("stale baseline entry (no longer matches anything — delete "
+              f"it): {chr(9).join(e)}")
+    n_base = len(findings) - len(new)
+    summary = (f"repro-lint: {len(files)} files, {len(new)} new finding(s), "
+               f"{n_base} baselined, {len(stale)} stale baseline entr"
+               f"{'y' if len(stale) == 1 else 'ies'}")
+    print(summary, file=sys.stderr if (new or stale) else sys.stdout)
+    return 1 if (new or stale) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

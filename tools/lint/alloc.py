@@ -1,0 +1,59 @@
+"""Allocator/refcount discipline (ALLOC01).
+
+``BlockAllocator`` (src/repro/serving/paged.py) owns the free list and
+per-page refcounts; prefix caching (PR 8) and swap-to-host (PR 9) both
+layered lifecycles on top of its invariants (a page is either free,
+owned-refcounted, or host-resident — never two at once). Any code that
+reaches into ``._free`` / ``._ref`` from outside the class can violate
+those states in ways the allocator's own assertions never see.
+
+ALLOC01 flags attribute access on allocator internals (``._free``,
+``._ref``, ``._free_list``, ``._refcount``, ``._refcounts``) through an
+allocator-valued base — a name whose last component contains ``alloc``
+(``self.allocator._free``, ``alloc._ref``) — anywhere outside a
+``BlockAllocator`` class body. The base-name requirement keeps unrelated
+``self._free`` attributes on other classes (the engine's jitted free fn)
+out of scope; tests poking internals should suppress inline with a
+comment saying what invariant they are deliberately breaking.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.lint.core import Finding, ParsedModule, dotted_name
+
+INTERNALS = {"_free", "_ref", "_free_list", "_freelist", "_refcount",
+             "_refcounts"}
+OWNER_CLASS = "BlockAllocator"
+
+
+def _allocator_base(node: ast.Attribute) -> bool:
+    base = dotted_name(node.value)
+    if base is None:
+        return False
+    return "alloc" in base.split(".")[-1].lower()
+
+
+def _inside_owner(node: ast.AST, mod: ParsedModule) -> bool:
+    cur = mod.parents.get(id(node))
+    while cur is not None:
+        if isinstance(cur, ast.ClassDef) and cur.name == OWNER_CLASS:
+            return True
+        cur = mod.parents.get(id(cur))
+    return False
+
+
+def check(mod: ParsedModule) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Attribute) or node.attr not in INTERNALS:
+            continue
+        if not _allocator_base(node) or _inside_owner(node, mod):
+            continue
+        out.append(mod.finding(
+            "ALLOC01", node,
+            f"direct access to allocator internal .{node.attr} outside "
+            f"{OWNER_CLASS}: page lifecycle (free/owned/host-resident) is "
+            "only sound through the public alloc/free/incref/refcount API"))
+    return out

@@ -1,0 +1,298 @@
+"""repro-lint plumbing: parsed-module model, suppressions, baseline, runner.
+
+Checkers (tools/lint/{prng,trace,hostsync,shardmesh,alloc}.py) are per-file
+AST passes fed a :class:`ParsedModule`; the state-surgery checker
+(tools/lint/surgery.py) is repo-level and cross-references files. Everything
+here is stdlib-only by design — the lint job must run before dependencies
+are even importable.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Z0-9_,\s]+)")
+SUPPRESS_FILE_RE = re.compile(r"#\s*repro-lint:\s*disable-file=([A-Z0-9_,\s]+)")
+
+SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules", ".pytest_cache",
+             "results"}
+
+
+class RefusedPath(Exception):
+    """An explicitly passed path the linter refuses to scan (compiled
+    artifacts: ``__pycache__`` directories, ``*.pyc`` files)."""
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str               # repo-relative, forward slashes
+    line: int
+    col: int
+    qualname: str           # enclosing def/class chain, "<module>" at top
+    message: str
+    snippet: str = ""       # whitespace-normalized source line
+
+    @property
+    def key(self) -> Tuple[str, str, str, str]:
+        """Baseline identity: line numbers are deliberately excluded so
+        unrelated edits above a grandfathered finding don't invalidate it."""
+        return (self.rule, self.path, self.qualname, self.snippet)
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule} "
+                f"[{self.qualname}] {self.message}")
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``jax.random.split`` from an Attribute chain / Name, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class ImportMap:
+    """Local name -> canonical dotted path, from imports plus simple
+    module/function-level aliases (``jj = jax.jit``)."""
+
+    def __init__(self, tree: ast.Module):
+        self.table: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.table[a.asname or a.name.split(".")[0]] = \
+                        a.name if a.asname else a.name.split(".")[0]
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and node.level == 0:
+                for a in node.names:
+                    if a.name != "*":
+                        self.table[a.asname or a.name] = \
+                            f"{node.module}.{a.name}"
+        # aliases: one pass after imports so `jj = jax.jit` resolves
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                cand = self.resolve(node.value)
+                if cand and cand.split(".")[0] in ("jax", "numpy",
+                                                   "functools"):
+                    self.table[node.targets[0].id] = cand
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        name = dotted_name(node)
+        if name is None:
+            return None
+        head, _, rest = name.partition(".")
+        head = self.table.get(head, head)
+        return f"{head}.{rest}" if rest else head
+
+
+@dataclass
+class ParsedModule:
+    """One source file plus the derived maps every checker needs."""
+    path: str                       # absolute
+    relpath: str                    # repo-relative, forward slashes
+    tree: ast.Module = None
+    lines: List[str] = field(default_factory=list)
+    imports: ImportMap = None
+    parents: Dict[int, ast.AST] = field(default_factory=dict)
+    quals: Dict[int, str] = field(default_factory=dict)
+
+    @classmethod
+    def parse(cls, src: str, path: str, relpath: str) -> "ParsedModule":
+        tree = ast.parse(src, filename=relpath)
+        mod = cls(path=path, relpath=relpath, tree=tree,
+                  lines=src.splitlines(), imports=ImportMap(tree))
+        mod._annotate(tree, None, "<module>")
+        return mod
+
+    def _annotate(self, node: ast.AST, parent, qual: str) -> None:
+        self.parents[id(node)] = parent
+        self.quals[id(node)] = qual
+        for child in ast.iter_child_nodes(node):
+            q = qual
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                q = child.name if qual == "<module>" \
+                    else f"{qual}.{child.name}"
+            self._annotate(child, node, q)
+
+    def qualname(self, node: ast.AST) -> str:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            parent = self.parents.get(id(node))
+            return self.quals.get(id(parent), "<module>") \
+                if parent is not None else "<module>"
+        return self.quals.get(id(node), "<module>")
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        return self.imports.resolve(node)
+
+    def is_call_to(self, node: ast.Call, canonical: str) -> bool:
+        return self.resolve(node.func) == canonical
+
+    def source_line(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return " ".join(self.lines[lineno - 1].split())
+        return ""
+
+    def finding(self, rule: str, node: ast.AST, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        return Finding(rule=rule, path=self.relpath, line=line,
+                       col=getattr(node, "col_offset", 0) + 1,
+                       qualname=self.quals.get(id(node), "<module>"),
+                       message=message, snippet=self.source_line(line))
+
+    # -- suppression comments ------------------------------------------
+    def suppressed_rules(self, lineno: int) -> Set[str]:
+        rules = set(self._file_suppressions())
+        for ln in (lineno, lineno - 1):
+            if 1 <= ln <= len(self.lines):
+                text = self.lines[ln - 1]
+                if ln != lineno and not text.lstrip().startswith("#"):
+                    continue            # previous line counts only if pure
+                m = SUPPRESS_RE.search(text)
+                if m:
+                    rules.update(r.strip() for r in m.group(1).split(","))
+        return rules
+
+    def _file_suppressions(self) -> Set[str]:
+        out: Set[str] = set()
+        for text in self.lines:
+            m = SUPPRESS_FILE_RE.search(text)
+            if m:
+                out.update(r.strip() for r in m.group(1).split(","))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# file collection
+# ---------------------------------------------------------------------------
+
+def collect_files(paths: Sequence[str], root: str) -> List[str]:
+    """Expand ``paths`` (relative to ``root``) into a sorted list of .py
+    files. Skips ``__pycache__`` and friends while walking; REFUSES paths
+    that explicitly name compiled artifacts — linting a stale .pyc (or a
+    directory of them) silently checks code that is not the source tree."""
+    out: Set[str] = set()
+    for p in paths:
+        full = p if os.path.isabs(p) else os.path.join(root, p)
+        base = os.path.basename(full.rstrip(os.sep))
+        if base == "__pycache__" or full.endswith((".pyc", ".pyo")):
+            raise RefusedPath(
+                f"refusing to scan compiled artifact {p!r} "
+                "(__pycache__/*.pyc are not source)")
+        if os.path.isdir(full):
+            for dirpath, dirnames, filenames in os.walk(full):
+                dirnames[:] = sorted(d for d in dirnames
+                                     if d not in SKIP_DIRS
+                                     and not d.endswith(".egg-info"))
+                for fn in filenames:
+                    if fn.endswith(".py"):
+                        out.add(os.path.join(dirpath, fn))
+        elif os.path.isfile(full):
+            if not full.endswith(".py"):
+                raise RefusedPath(f"not a Python source file: {p!r}")
+            out.add(full)
+    return sorted(out)
+
+
+# ---------------------------------------------------------------------------
+# running checkers
+# ---------------------------------------------------------------------------
+
+def _file_checkers():
+    # imported lazily: checker modules import core for ParsedModule/Finding
+    from tools.lint import alloc, hostsync, prng, shardmesh, trace
+    return (prng.check, trace.check, hostsync.check, shardmesh.check,
+            alloc.check)
+
+
+def lint_module(mod: ParsedModule,
+                rules: Optional[Set[str]] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for check in _file_checkers():
+        findings.extend(check(mod))
+    findings = [f for f in findings
+                if f.rule not in mod.suppressed_rules(f.line)]
+    if rules is not None:
+        findings = [f for f in findings if f.rule in rules]
+    return sorted(findings, key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+def lint_source(src: str, relpath: str = "<fixture>.py",
+                rules: Optional[Set[str]] = None) -> List[Finding]:
+    """Lint a source string — the test-suite entry point."""
+    return lint_module(ParsedModule.parse(src, relpath, relpath), rules)
+
+
+def lint_file(path: str, root: str,
+              rules: Optional[Set[str]] = None) -> List[Finding]:
+    with open(path, "r", encoding="utf-8") as f:
+        src = f.read()
+    rel = os.path.relpath(path, root).replace(os.sep, "/")
+    try:
+        mod = ParsedModule.parse(src, path, rel)
+    except SyntaxError as e:
+        return [Finding(rule="PARSE", path=rel, line=e.lineno or 1, col=1,
+                        qualname="<module>", message=f"syntax error: {e.msg}",
+                        snippet="")]
+    return lint_module(mod, rules)
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+def load_baseline(path: str) -> List[Tuple[str, str, str, str]]:
+    """Baseline entries are tab-separated ``rule<TAB>path<TAB>qualname<TAB>
+    normalized-source-line`` — line numbers are omitted on purpose so the
+    entries survive unrelated edits. ``#`` lines are rationale comments."""
+    entries: List[Tuple[str, str, str, str]] = []
+    if not os.path.exists(path):
+        return entries
+    with open(path, "r", encoding="utf-8") as f:
+        for raw in f:
+            line = raw.rstrip("\n")
+            if not line.strip() or line.lstrip().startswith("#"):
+                continue
+            parts = line.split("\t")
+            if len(parts) != 4:
+                raise ValueError(
+                    f"malformed baseline line (want 4 tab-separated "
+                    f"fields): {line!r}")
+            entries.append(tuple(parts))
+    return entries
+
+
+def match_baseline(findings: Iterable[Finding],
+                   entries: Sequence[Tuple[str, str, str, str]]
+                   ) -> Tuple[List[Finding],
+                              List[Tuple[str, str, str, str]]]:
+    """Split into (new findings, stale entries). An entry absorbs every
+    finding with its key, so N identical grandfathered lines in one
+    function need one entry; an entry matching nothing is STALE and fails
+    the run — expired exemptions must be deleted, not accumulated."""
+    keys = set(entries)
+    new = [f for f in findings if f.key not in keys]
+    seen = {f.key for f in findings}
+    stale = [e for e in entries if e not in seen]
+    return new, stale
+
+
+def write_baseline(path: str, findings: Iterable[Finding]) -> None:
+    with open(path, "w", encoding="utf-8") as f:
+        f.write("# repro-lint baseline: grandfathered findings "
+                "(tools/lint/core.py::load_baseline)\n"
+                "# Regenerate with `python -m tools.lint "
+                "--update-baseline`; re-add rationale comments after —\n"
+                "# every entry should say WHY the site is exempt.\n")
+        for fd in sorted(set(f.key for f in findings)):
+            f.write("\t".join(fd) + "\n")

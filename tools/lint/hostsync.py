@@ -1,0 +1,70 @@
+"""Host-sync hygiene (SYNC01).
+
+The scheduler's wall-clock contract (docs/serving.md, "The harvest
+boundary") allows exactly one device->host readback point per scheduler
+iteration: ``_harvest``. Every other ``np.asarray``/``jax.device_get``/
+``block_until_ready`` on decode state stalls the dispatch pipeline — the
+host blocks on the device stream mid-loop and speculation depth stops
+hiding latency.
+
+SYNC01 flags, inside ``src/repro/serving/`` and ``src/repro/launch/``,
+any host-materializing call whose argument references decode state
+(a ``state`` name, a ``*_state`` name, or a ``self._state``-style
+attribute). Sanctioned sites — the harvest boundary itself, the
+round-based reference scheduler's poll loop, the blocking
+``Engine.run`` harness, swap-out's device_get — are grandfathered in
+``tools/lint/baseline.txt`` with rationale comments, so NEW syncs fail
+the lint run while the audited ones stay visible.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.lint.core import Finding, ParsedModule, dotted_name
+
+SCOPES = ("src/repro/serving/", "src/repro/launch/")
+
+SYNC_CALLS = {"numpy.asarray", "numpy.array", "jax.device_get",
+              "jax.block_until_ready"}
+# int(...)/float(...) of device state blocks exactly like np.asarray
+CAST_CALLS = {"int", "float", "bool"}
+
+
+def _references_state(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and (
+                sub.id == "state" or sub.id.endswith("_state")):
+            return True
+        if isinstance(sub, ast.Attribute) and (
+                sub.attr == "state" or sub.attr.endswith("_state")):
+            return True
+    return False
+
+
+def check(mod: ParsedModule) -> List[Finding]:
+    if not mod.relpath.startswith(SCOPES):
+        return []
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call) and node.args):
+            continue
+        target = mod.resolve(node.func)
+        fname = dotted_name(node.func) or ""
+        is_sync = target in SYNC_CALLS
+        is_cast = fname in CAST_CALLS
+        if not (is_sync or is_cast):
+            continue
+        if not _references_state(node.args[0]):
+            continue
+        if is_cast and any(isinstance(s, ast.Call)
+                           for s in ast.walk(node.args[0])):
+            continue    # int(np.asarray(...)) — the inner call is the sync
+        label = fname or target
+        out.append(mod.finding(
+            "SYNC01", node,
+            f"{label}(...) reads decode state back to the host outside "
+            "the harvest boundary — this blocks the dispatch loop on the "
+            "device stream; batch it into _harvest or baseline it with a "
+            "rationale if this site IS a sanctioned boundary"))
+    return out

@@ -1,0 +1,208 @@
+"""PRNG discipline checkers.
+
+The serving stack's determinism story (docs/serving.md, "Per-request
+sampling") forbids the classic jax idiom ``key, sub = split(key)`` on any
+stream a request's tokens depend on: a carried key makes the draw at
+position p a function of *how many* splits happened before it — batch
+composition, slot index, preemption count — instead of a pure counter
+``fold_in(base, position)``. PR 5 designed that bug class out; these rules
+keep it out.
+
+PRNG01  split-and-carry: a ``jax.random.split`` result rebinds the very
+        key it consumed (``key, sub = split(key)`` / ``self.rng, s =
+        split(self.rng)``). Whitelist legitimate sites (init-time param
+        derivation, training data-order streams) inline with a
+        ``# repro-lint: disable=PRNG01`` comment explaining why.
+PRNG02  key reuse: the same key expression passed to two consuming draw
+        calls in one function — two draws from one key are correlated.
+PRNG03  unsalted stream (``src/repro/serving/`` only): a ``split`` whose
+        key traces back to the base/verify stream (``step_keys``,
+        ``samp["key"]``, ``PRNGKey``) with no ``fold_in`` salt between.
+        A new draft-style stream must fold in its own salt constant so it
+        stays disjoint from the verify keys at the same position counter
+        (sampling.py's ``DRAFT_SALT`` is the model).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from tools.lint.core import Finding, ParsedModule, dotted_name
+
+SPLIT = "jax.random.split"
+FOLD_IN = "jax.random.fold_in"
+PRNGKEY = "jax.random.PRNGKey"
+VMAP = "jax.vmap"
+
+# draw calls that CONSUME a key (split/fold_in derive, they don't consume)
+CONSUMERS = {f"jax.random.{n}" for n in (
+    "categorical", "uniform", "normal", "bernoulli", "gumbel",
+    "truncated_normal", "randint", "permutation", "choice", "exponential",
+    "laplace", "rademacher")}
+
+# functions that mint the base per-position verify stream
+BASE_STREAMS = {"step_keys"}
+
+
+def _norm(node: ast.AST) -> str:
+    # unparse, not ast.dump: dump embeds Load/Store ctx, which would make
+    # an assignment target never compare equal to the same expression read
+    return ast.unparse(node)
+
+
+def _split_call(node: ast.AST, mod: ParsedModule) -> Optional[ast.Call]:
+    """The split call inside ``value`` — direct or through a subscript
+    (``split(key)[0]`` carries just the same)."""
+    if isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Call) and mod.is_call_to(node, SPLIT):
+        return node
+    return None
+
+
+def _check_split_carry(mod: ParsedModule) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        call = _split_call(node.value, mod)
+        if call is None or not call.args:
+            continue
+        key_dump = _norm(call.args[0])
+        targets: List[ast.AST] = []
+        for t in node.targets:
+            targets.extend(t.elts if isinstance(t, ast.Tuple) else [t])
+        if any(_norm(t) == key_dump for t in targets):
+            out.append(mod.finding(
+                "PRNG01", node,
+                "split-and-carried PRNG key: the rebind makes every "
+                "downstream draw depend on split order, not a position "
+                "counter — derive per-use keys with "
+                "fold_in(base, counter) instead"))
+    return out
+
+
+def _check_key_reuse(mod: ParsedModule) -> List[Finding]:
+    out: List[Finding] = []
+    funcs = [n for n in ast.walk(mod.tree)
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    for fn in funcs:
+        seen: Dict[str, ast.Call] = {}
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Call) and node.args):
+                continue
+            target = mod.resolve(node.func)
+            if target not in CONSUMERS:
+                continue
+            if mod.quals.get(id(node)) != mod.quals.get(id(fn.body[0])):
+                continue                 # belongs to a nested def
+            key_dump = _norm(node.args[0])
+            if key_dump in seen:
+                out.append(mod.finding(
+                    "PRNG02", node,
+                    f"PRNG key {ast.unparse(node.args[0])!r} already "
+                    f"consumed by a draw on line "
+                    f"{seen[key_dump].lineno} — two draws from one key "
+                    "are correlated; fold_in a fresh counter per draw"))
+            else:
+                seen[key_dump] = node
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PRNG03: salt tracing through local dataflow (serving scope only)
+# ---------------------------------------------------------------------------
+
+SALTED, UNSALTED, UNKNOWN = "salted", "unsalted", "unknown"
+
+
+def _salt_status(node: ast.AST, env: Dict[str, ast.AST],
+                 mod: ParsedModule, depth: int = 0) -> str:
+    if depth > 12:
+        return UNKNOWN
+    if isinstance(node, ast.Call):
+        target = mod.resolve(node.func)
+        if target == FOLD_IN:
+            return SALTED
+        if target == PRNGKEY:
+            return UNSALTED
+        if target == SPLIT and node.args:
+            return _salt_status(node.args[0], env, mod, depth + 1)
+        fname = dotted_name(node.func)
+        if fname and fname.split(".")[-1] in BASE_STREAMS:
+            return UNSALTED
+        # jax.vmap(lambda k: ...)(actual): the lambda's result status with
+        # params bound to the actuals — exactly the draft_keys idiom
+        if isinstance(node.func, ast.Call) \
+                and mod.resolve(node.func.func) == VMAP \
+                and node.func.args \
+                and isinstance(node.func.args[0], ast.Lambda):
+            lam = node.func.args[0]
+            inner = dict(env)
+            for p, a in zip(lam.args.args, node.args):
+                inner[p.arg] = a
+            return _salt_status(lam.body, inner, mod, depth + 1)
+        return UNKNOWN
+    if isinstance(node, ast.Name):
+        bound = env.get(node.id)
+        if bound is None:
+            return UNKNOWN
+        # guard self-reference cycles (``k = fold_in(k, ...)`` rebinds)
+        trimmed = {n: e for n, e in env.items() if n != node.id}
+        return _salt_status(bound, trimmed, mod, depth + 1)
+    if isinstance(node, ast.Subscript):
+        return _salt_status(node.value, env, mod, depth + 1)
+    return UNKNOWN
+
+
+def _check_unsalted(mod: ParsedModule) -> List[Finding]:
+    if not mod.relpath.startswith("src/repro/serving/"):
+        return []
+    out: List[Finding] = []
+    funcs = [n for n in ast.walk(mod.tree)
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    for fn in funcs:
+        env: Dict[str, ast.AST] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                env[node.targets[0].id] = node.value
+        out.extend(_walk_splits(fn, env, mod))
+    return out
+
+
+def _walk_splits(node: ast.AST, env: Dict[str, ast.AST],
+                 mod: ParsedModule) -> List[Finding]:
+    out: List[Finding] = []
+    for sub in ast.walk(node):
+        if not (isinstance(sub, ast.Call) and mod.is_call_to(sub, SPLIT)
+                and sub.args):
+            continue
+        key = sub.args[0]
+        scope = dict(env)
+        # a split inside a vmapped lambda sees its params bound to the
+        # vmap call's actuals; find the nearest such binding
+        lam = mod.parents.get(id(sub))
+        while lam is not None and not isinstance(lam, ast.Lambda):
+            lam = mod.parents.get(id(lam))
+        if isinstance(lam, ast.Lambda):
+            outer = mod.parents.get(id(lam))       # jax.vmap(lambda ...)
+            call = mod.parents.get(id(outer)) if outer is not None else None
+            if isinstance(outer, ast.Call) \
+                    and mod.resolve(outer.func) == VMAP \
+                    and isinstance(call, ast.Call):
+                for p, a in zip(lam.args.args, call.args):
+                    scope[p.arg] = a
+        if _salt_status(key, scope, mod) == UNSALTED:
+            out.append(mod.finding(
+                "PRNG03", sub,
+                "split of an unsalted base/verify key stream: a new "
+                "serving key stream must fold_in its own salt constant "
+                "first (sampling.py DRAFT_SALT is the model) so it stays "
+                "disjoint from the verify keys at the same position"))
+    return out
+
+
+def check(mod: ParsedModule) -> List[Finding]:
+    return (_check_split_carry(mod) + _check_key_reuse(mod)
+            + _check_unsalted(mod))

@@ -1,0 +1,100 @@
+"""jit sharding completeness (SHARD01).
+
+Under a mesh, a ``jax.jit`` without explicit ``in_shardings`` /
+``out_shardings`` silently falls back to GSPMD inference: the program
+still runs, but layout decisions drift between entry points and the
+bitwise cross-layout equivalence suite only catches it after the fact.
+The engine's rule is mechanical — if a module works with a mesh, every
+jit in it states its shardings (or forwards ``**jit_kwargs`` built from
+them).
+
+SHARD01 flags, inside ``src/repro/serving/`` and ``src/repro/launch/``,
+any ``jax.jit(...)`` call (through aliases like ``jj = jax.jit``) with
+neither ``in_shardings``/``out_shardings`` keywords nor a ``**kwargs``
+forward, unless:
+
+- the module never mentions a mesh at all (single-device helpers), or
+- the call sits in the body of an ``if <...>mesh is None:`` branch —
+  the engine's unsharded fallback path is explicitly mesh-free.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.lint.core import Finding, ParsedModule
+
+SCOPES = ("src/repro/serving/", "src/repro/launch/")
+JIT = "jax.jit"
+SHARDING_KWARGS = {"in_shardings", "out_shardings"}
+
+
+def _module_mentions_mesh(mod: ParsedModule) -> bool:
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Name) and "mesh" in node.id.lower():
+            return True
+        if isinstance(node, ast.Attribute) and "mesh" in node.attr.lower():
+            return True
+        if isinstance(node, ast.arg) and "mesh" in node.arg.lower():
+            return True
+    return False
+
+
+def _is_mesh_none_test(test: ast.AST) -> bool:
+    """``<anything>.mesh is None`` / ``mesh is None`` (possibly inside a
+    BoolOp) — the guard that marks the unsharded fallback branch."""
+    for node in ast.walk(test):
+        if not isinstance(node, ast.Compare):
+            continue
+        if not (len(node.ops) == 1 and isinstance(node.ops[0], ast.Is)
+                and isinstance(node.comparators[0], ast.Constant)
+                and node.comparators[0].value is None):
+            continue
+        left = node.left
+        name = left.attr if isinstance(left, ast.Attribute) else (
+            left.id if isinstance(left, ast.Name) else "")
+        if "mesh" in name.lower():
+            return True
+    return False
+
+
+def _under_mesh_none_branch(node: ast.AST, mod: ParsedModule) -> bool:
+    cur = mod.parents.get(id(node))
+    child = node
+    while cur is not None:
+        if isinstance(cur, ast.If) and _is_mesh_none_test(cur.test):
+            # only the THEN branch is the unsharded path
+            if any(child is s or _contains(s, child) for s in cur.body):
+                return True
+        child = cur
+        cur = mod.parents.get(id(cur))
+    return False
+
+
+def _contains(tree: ast.AST, target: ast.AST) -> bool:
+    return any(sub is target for sub in ast.walk(tree))
+
+
+def check(mod: ParsedModule) -> List[Finding]:
+    if not mod.relpath.startswith(SCOPES):
+        return []
+    if not _module_mentions_mesh(mod):
+        return []
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call) or not mod.is_call_to(node, JIT):
+            continue
+        kw_names = {kw.arg for kw in node.keywords}
+        if kw_names & SHARDING_KWARGS:
+            continue
+        if None in kw_names:        # **jit_kwargs forward
+            continue
+        if _under_mesh_none_branch(node, mod):
+            continue
+        out.append(mod.finding(
+            "SHARD01", node,
+            "jax.jit without explicit in_shardings/out_shardings in a "
+            "mesh-aware module: GSPMD inference will pick layouts that "
+            "drift between entry points — pass the specs (or **jit_kwargs "
+            "carrying them), or guard the call under `if mesh is None:`"))
+    return out

@@ -1,0 +1,284 @@
+"""State-surgery completeness (SURG01) — a repo-level cross-file check.
+
+``make_decode_state`` (src/repro/serving/engine.py) is the ONE definition
+of the decode-state skeleton. Five other places perform surgery on that
+tree and must stay leaf-complete when someone adds a state leaf:
+
+1. ``speculative_step`` rebuilds the dict explicitly — a leaf it doesn't
+   produce is silently dropped from every decode step.
+2. ``Engine.swap_out_slot`` resets the per-slot counters by name — a new
+   counter that isn't reset breaks preempt-resume budget arithmetic.
+3. engine.py must route slot surgery through the required
+   ``cache_ops`` API (write_slot/reset_slot/gather_state/scatter_state/...),
+   and each of those must still exist in cache_ops.py.
+4. ``sharding/rules.py::serve_state_specs`` must handle the paged KV pool
+   leaf names that ``cache_ops.paged_spec`` declares (``k``/``v``) — an
+   unhandled pool leaf silently replicates gigabytes of KV.
+5. ``launch/steps.py``'s serve-step ``state_specs`` template must name
+   every leaf — a missing key KeyErrors only on the mesh path at launch.
+6. ``scheduler._harvest`` must read back the harvest leaf set — dropping
+   one silently freezes that counter at its admit-time value.
+
+Checks 1/5 compare against the authoritative leaf set parsed from
+``make_decode_state`` itself, so ADDING a leaf there immediately flags
+every surface that wasn't updated; 2/4/6 pin the named handler constants,
+so DELETING a handler line flags too. All structural: no imports of repro
+code, stdlib ``ast`` only.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import List, Optional, Set
+
+from tools.lint.core import Finding, ParsedModule
+
+ENGINE = "src/repro/serving/engine.py"
+SCHEDULER = "src/repro/serving/scheduler.py"
+CACHE_OPS = "src/repro/serving/cache_ops.py"
+RULES = "src/repro/sharding/rules.py"
+STEPS = "src/repro/launch/steps.py"
+
+# cache_ops functions every slot-surgery path in the engine must go through
+REQUIRED_CACHE_OPS = {"write_slot", "reset_slot", "gather_state",
+                      "scatter_state", "extract_slot", "admit_pages",
+                      "blank_pages", "commit"}
+# per-slot counters swap-out must reset by name (scheduler resume convention)
+SWAP_RESET_LEAVES = {"new_count", "slot_iters", "last"}
+# leaves _harvest reads back each scheduler iteration
+HARVEST_LEAVES = {"new_count", "slot_iters", "last", "tokens", "logprobs"}
+
+
+def _load(root: str, rel: str) -> Optional[ParsedModule]:
+    full = os.path.join(root, rel)
+    if not os.path.exists(full):
+        return None
+    with open(full, "r", encoding="utf-8") as f:
+        return ParsedModule.parse(f.read(), full, rel)
+
+
+def _find_def(mod: ParsedModule, name: str):
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name == name:
+            return node
+    return None
+
+
+def _missing_surface(rel: str, what: str) -> Finding:
+    return Finding(rule="SURG01", path=rel, line=1, col=1,
+                   qualname="<module>",
+                   message=f"surgery surface not found: {what} — if it "
+                           "moved, update tools/lint/surgery.py alongside",
+                   snippet="")
+
+
+def _str_constants(node: ast.AST) -> Set[str]:
+    return {c.value for c in ast.walk(node)
+            if isinstance(c, ast.Constant) and isinstance(c.value, str)}
+
+
+def decode_state_leaves(engine: ParsedModule) -> Set[str]:
+    """Authoritative leaf set: keys of the dict literal bound to ``state``
+    in make_decode_state, plus any ``state["X"] = ...`` extensions (the
+    conditional ``dcache``)."""
+    fn = _find_def(engine, "make_decode_state")
+    if fn is None:
+        return set()
+    leaves: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt = node.targets[0]
+            if isinstance(tgt, ast.Name) and tgt.id == "state" \
+                    and isinstance(node.value, ast.Dict):
+                for k in node.value.keys:
+                    if isinstance(k, ast.Constant) and isinstance(k.value,
+                                                                  str):
+                        leaves.add(k.value)
+            elif isinstance(tgt, ast.Subscript) \
+                    and isinstance(tgt.value, ast.Name) \
+                    and tgt.value.id == "state" \
+                    and isinstance(tgt.slice, ast.Constant):
+                leaves.add(tgt.slice.value)
+    return leaves
+
+
+def _produced_leaves(fn, out_name: str) -> Set[str]:
+    """Leaf names a rebuild site produces: ``X = dict(a=..., b=...)``
+    keywords plus ``X["c"] = ...`` extensions."""
+    produced: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt = node.targets[0]
+            if isinstance(tgt, ast.Name) and tgt.id == out_name:
+                v = node.value
+                if isinstance(v, ast.Call) and isinstance(v.func, ast.Name) \
+                        and v.func.id == "dict":
+                    produced.update(kw.arg for kw in v.keywords if kw.arg)
+                elif isinstance(v, ast.Dict):
+                    produced.update(k.value for k in v.keys
+                                    if isinstance(k, ast.Constant))
+            elif isinstance(tgt, ast.Subscript) \
+                    and isinstance(tgt.value, ast.Name) \
+                    and tgt.value.id == out_name \
+                    and isinstance(tgt.slice, ast.Constant):
+                produced.add(tgt.slice.value)
+    return produced
+
+
+def _paged_pool_leaf_names(cache_ops_mod: ParsedModule) -> Set[str]:
+    """KV pool leaf names as declared by cache_ops.paged_spec: the string
+    constants compared with ``k in (...)`` whose IfExp arm is PAGED_KV."""
+    fn = _find_def(cache_ops_mod, "paged_spec")
+    if fn is None:
+        return set()
+    names: Set[str] = set()
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.IfExp):
+            continue
+        body_is_kv = any(isinstance(n, ast.Name) and n.id == "PAGED_KV"
+                         for n in ast.walk(node.body))
+        if body_is_kv and isinstance(node.test, ast.Compare):
+            names |= _str_constants(node.test)
+    return names
+
+
+def check_repo(root: str) -> List[Finding]:
+    out: List[Finding] = []
+    engine = _load(root, ENGINE)
+    if engine is None:
+        return [_missing_surface(ENGINE, "serving engine module")]
+    leaves = decode_state_leaves(engine)
+    if not leaves:
+        return [_missing_surface(
+            ENGINE, "make_decode_state state-dict literal")]
+
+    # -- 1: speculative_step rebuild completeness -----------------------
+    step = _find_def(engine, "speculative_step")
+    if step is None:
+        out.append(_missing_surface(ENGINE, "speculative_step"))
+    else:
+        produced = _produced_leaves(step, "new_state")
+        for leaf in sorted(leaves - produced):
+            out.append(Finding(
+                rule="SURG01", path=ENGINE, line=step.lineno, col=1,
+                qualname="speculative_step",
+                message=f"decode-state leaf {leaf!r} (make_decode_state) "
+                        "is not produced by speculative_step's new_state "
+                        "rebuild — it would be silently dropped every step",
+                snippet=f"missing-leaf:{leaf}"))
+
+    # -- 2: swap_out_slot counter resets --------------------------------
+    swap = _find_def(engine, "swap_out_slot")
+    if swap is None:
+        out.append(_missing_surface(ENGINE, "swap_out_slot"))
+    else:
+        handled = _str_constants(swap)
+        for leaf in sorted(SWAP_RESET_LEAVES - handled):
+            out.append(Finding(
+                rule="SURG01", path=ENGINE, line=swap.lineno, col=1,
+                qualname="swap_out_slot",
+                message=f"swap_out_slot no longer touches per-slot leaf "
+                        f"{leaf!r} — preempt-resume counter rebasing "
+                        "depends on it being snapshot/reset by name",
+                snippet=f"missing-leaf:{leaf}"))
+
+    # -- 3: engine routes surgery through cache_ops, which provides it --
+    cache_ops_mod = _load(root, CACHE_OPS)
+    engine_attrs = {n.attr for n in ast.walk(engine.tree)
+                    if isinstance(n, ast.Attribute)}
+    cache_defs = set()
+    if cache_ops_mod is not None:
+        cache_defs = {n.name for n in ast.walk(cache_ops_mod.tree)
+                      if isinstance(n, ast.FunctionDef)}
+    else:
+        out.append(_missing_surface(CACHE_OPS, "cache_ops module"))
+    for api in sorted(REQUIRED_CACHE_OPS):
+        if api not in engine_attrs:
+            out.append(Finding(
+                rule="SURG01", path=ENGINE, line=1, col=1,
+                qualname="<module>",
+                message=f"engine no longer references cache_ops.{api} — "
+                        "slot surgery must go through the cache_ops API "
+                        "so both layouts stay covered",
+                snippet=f"missing-api:{api}"))
+        if cache_ops_mod is not None and api not in cache_defs:
+            out.append(Finding(
+                rule="SURG01", path=CACHE_OPS, line=1, col=1,
+                qualname="<module>",
+                message=f"cache_ops.{api} is referenced by the engine but "
+                        "not defined here",
+                snippet=f"missing-def:{api}"))
+
+    # -- 4: sharding rules handle the paged KV pool leaf names ----------
+    rules_mod = _load(root, RULES)
+    if rules_mod is None:
+        out.append(_missing_surface(RULES, "sharding rules module"))
+    elif cache_ops_mod is not None:
+        pool_names = _paged_pool_leaf_names(cache_ops_mod)
+        if not pool_names:
+            out.append(_missing_surface(
+                CACHE_OPS, "paged_spec PAGED_KV leaf-name declaration"))
+        handled: Set[str] = set()
+        for fname in ("serve_state_specs", "_serve_state_leaf"):
+            fn = _find_def(rules_mod, fname)
+            if fn is not None:
+                handled |= _str_constants(fn)
+        for leaf in sorted(pool_names - handled):
+            out.append(Finding(
+                rule="SURG01", path=RULES, line=1, col=1,
+                qualname="serve_state_specs",
+                message=f"KV pool leaf {leaf!r} (cache_ops.paged_spec) has "
+                        "no handler in serve_state_specs/_serve_state_leaf "
+                        "— the pool would silently replicate on every "
+                        "device instead of sharding its KV-head axis",
+                snippet=f"missing-leaf:{leaf}"))
+
+    # -- 5: launch serve-step state_specs template names every leaf -----
+    steps_mod = _load(root, STEPS)
+    if steps_mod is None:
+        out.append(_missing_surface(STEPS, "launch steps module"))
+    else:
+        spec_keys: Set[str] = set()
+        spec_line = 1
+        for node in ast.walk(steps_mod.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and node.targets[0].id == "state_specs" \
+                    and isinstance(node.value, ast.Dict):
+                spec_keys = {k.value for k in node.value.keys
+                             if isinstance(k, ast.Constant)}
+                spec_line = node.lineno
+        if not spec_keys:
+            out.append(_missing_surface(STEPS, "state_specs dict literal"))
+        else:
+            for leaf in sorted(leaves - spec_keys):
+                out.append(Finding(
+                    rule="SURG01", path=STEPS, line=spec_line, col=1,
+                    qualname="build_serve_step",
+                    message=f"decode-state leaf {leaf!r} has no entry in "
+                            "the serve-step state_specs template — the "
+                            "mesh launch path KeyErrors (or mis-shards) "
+                            "on it",
+                    snippet=f"missing-leaf:{leaf}"))
+
+    # -- 6: scheduler harvest reads back the harvest leaf set -----------
+    sched = _load(root, SCHEDULER)
+    if sched is None:
+        out.append(_missing_surface(SCHEDULER, "scheduler module"))
+    else:
+        harvest = _find_def(sched, "_harvest")
+        if harvest is None:
+            out.append(_missing_surface(SCHEDULER, "_harvest"))
+        else:
+            read = _str_constants(harvest)
+            for leaf in sorted(HARVEST_LEAVES - read):
+                out.append(Finding(
+                    rule="SURG01", path=SCHEDULER, line=harvest.lineno,
+                    col=1, qualname="Scheduler._harvest",
+                    message=f"_harvest no longer reads back leaf {leaf!r} "
+                            "— streams would stall on a frozen counter or "
+                            "lose committed output",
+                    snippet=f"missing-leaf:{leaf}"))
+
+    return sorted(out, key=lambda f: (f.path, f.line, f.snippet))
